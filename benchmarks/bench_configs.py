@@ -1,0 +1,42 @@
+"""Paper Figures 9+10: SpatialParquet configuration sweep.
+
+Fig 9a: FP-delta vs raw, +- gzip, source order (eB shows no gain unsorted).
+Fig 9b: same after Hilbert sorting.
+Fig 10: encoding + sorting overhead at write time.
+"""
+
+from __future__ import annotations
+
+import os
+
+from repro.core.writer import write_file
+
+from .common import file_mb, make_dataset, timer, tmppath
+
+
+def run(scale: float = 1.0, datasets=("PT", "TR", "MB", "eB")) -> list[dict]:
+    rows = []
+    for ds in datasets:
+        cols = make_dataset(ds, scale)
+        for sort in (None, "hilbert", "z"):
+            for enc in ("fp_delta", "raw"):
+                for codec in ("none", "gzip"):
+                    p = tmppath(".spqf")
+                    with timer() as t:
+                        write_file(p, columns=cols, sort=sort, encoding=enc, codec=codec)
+                    rows.append(dict(
+                        table="F9F10", dataset=ds, sort=sort or "source",
+                        encoding=enc, codec=codec, mb=file_mb(p), write_s=t["s"],
+                    ))
+                    os.unlink(p)
+    return rows
+
+
+def summarize(rows) -> list[str]:
+    out = ["# Figures 9/10: size MB & write s by (sort, encoding, codec)"]
+    for r in rows:
+        out.append(
+            f"F9 {r['dataset']}/{r['sort']}/{r['encoding']}/{r['codec']}: "
+            f"{r['mb']:.1f}MB {r['write_s']:.2f}s"
+        )
+    return out

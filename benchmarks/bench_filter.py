@@ -1,0 +1,81 @@
+"""Paper Figure 11: light-weight spatial index — read time & pages pruned for
+no filter / small range (~0.01% of area) / large range (~1%).
+
+Also reports GeoParquet-like page pruning (the paper notes it has "similar
+benefit" through its MBR columns) for comparison."""
+
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from repro.baselines.geoparquet_like import GeoParquetLikeReader, GeoParquetLikeWriter
+from repro.core.reader import SpatialParquetReader
+from repro.core.writer import write_file
+
+from .common import dataset_geometries, make_dataset, timer, tmppath
+
+
+def _query_boxes(cols, area_fracs):
+    xs, ys = cols.x, cols.y
+    x0, x1 = float(np.min(xs)), float(np.max(xs))
+    y0, y1 = float(np.min(ys)), float(np.max(ys))
+    boxes = {}
+    for name, frac in area_fracs.items():
+        side = np.sqrt(frac)
+        w, h = (x1 - x0) * side, (y1 - y0) * side
+        # center on a data point so the query is non-empty
+        cxq, cyq = float(xs[len(xs) // 3]), float(ys[len(ys) // 3])
+        boxes[name] = (cxq - w / 2, cyq - h / 2, cxq + w / 2, cyq + h / 2)
+    return boxes
+
+
+def run(scale: float = 1.0, datasets=("PT", "eB")) -> list[dict]:
+    rows = []
+    for ds in datasets:
+        cols = make_dataset(ds, scale, sort="hilbert")
+        boxes = _query_boxes(cols, {"small": 1e-4, "large": 1e-2})
+        boxes["none"] = None
+
+        p = tmppath(".spqf")
+        write_file(p, columns=cols, sort=None, codec="none",
+                   page_values=16384, row_group_records=1 << 20)
+        r = SpatialParquetReader(p)
+        for qname in ("none", "small", "large"):
+            with timer() as t:
+                geo, _, st = r.read_columnar(bbox=boxes[qname], refine=True)
+            rows.append(dict(
+                table="F11", dataset=ds, fmt="spatialparquet", query=qname,
+                s=t["s"], pages_read=st.pages_read, pages_total=st.pages_total,
+                bytes_read=st.bytes_read, bytes_total=st.bytes_total,
+                records=st.records_returned,
+            ))
+        r.close()
+        os.unlink(p)
+
+        geoms = dataset_geometries(cols)
+        p = tmppath(".gpq")
+        with GeoParquetLikeWriter(p) as w:
+            w.write_geometries(geoms)
+        rd = GeoParquetLikeReader(p)
+        for qname in ("none", "small", "large"):
+            with timer() as t:
+                out, pr, pt = rd.read(bbox=boxes[qname])
+            rows.append(dict(
+                table="F11", dataset=ds, fmt="geoparquet", query=qname,
+                s=t["s"], pages_read=pr, pages_total=pt, records=len(out),
+            ))
+        rd.close()
+        os.unlink(p)
+    return rows
+
+
+def summarize(rows) -> list[str]:
+    out = ["# Figure 11: indexed range reads (pages read/total, seconds)"]
+    for r in rows:
+        out.append(
+            f"F11 {r['dataset']}/{r['fmt']}/{r['query']}: {r['s']:.3f}s "
+            f"pages={r['pages_read']}/{r['pages_total']} records={r.get('records','-')}"
+        )
+    return out

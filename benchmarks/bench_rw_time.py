@@ -1,0 +1,81 @@
+"""Paper Table 3: write/read time (uncompressed).
+
+Reports SpatialParquet through BOTH access paths: the object API (the path
+the paper measured, slowed by per-record reconstruction) and the columnar
+fast path (the paper's §5.1 future-work fix — "lower-level access to the
+coordinate arrays" — which we implement as the primary pipeline path)."""
+
+from __future__ import annotations
+
+import os
+
+from repro.baselines.geojson_format import read_geojson, write_geojson
+from repro.baselines.geoparquet_like import GeoParquetLikeReader, GeoParquetLikeWriter
+from repro.baselines.shapefile import read_shapefile, write_shapefile
+from repro.core.reader import SpatialParquetReader
+from repro.core.writer import write_file
+
+from .common import dataset_geometries, make_dataset, timer, tmppath
+
+
+def run(scale: float = 1.0, datasets=("PT", "TR", "MB", "eB")) -> list[dict]:
+    rows = []
+    for ds in datasets:
+        cols = make_dataset(ds, scale, sort="hilbert")
+        geoms = dataset_geometries(cols)
+
+        p = tmppath(".spqf")
+        with timer() as t:
+            write_file(p, columns=cols, sort=None, codec="none")
+        rows.append(dict(table="T3", dataset=ds, fmt="spatialparquet", op="write", s=t["s"]))
+        r = SpatialParquetReader(p)
+        with timer() as t:
+            g, _, _ = r.read_columnar()
+        rows.append(dict(table="T3", dataset=ds, fmt="spatialparquet(columnar)", op="read", s=t["s"]))
+        with timer() as t:
+            objs, _ = r.read()
+        rows.append(dict(table="T3", dataset=ds, fmt="spatialparquet(object)", op="read", s=t["s"]))
+        r.close()
+        os.unlink(p)
+
+        p = tmppath(".gpq")
+        with timer() as t:
+            with GeoParquetLikeWriter(p) as w:
+                w.write_geometries(geoms)
+        rows.append(dict(table="T3", dataset=ds, fmt="geoparquet", op="write", s=t["s"]))
+        rd = GeoParquetLikeReader(p)
+        with timer() as t:
+            rd.read()
+        rows.append(dict(table="T3", dataset=ds, fmt="geoparquet", op="read", s=t["s"]))
+        rd.close()
+        os.unlink(p)
+
+        p = tmppath(".shp")
+        with timer() as t:
+            write_shapefile(p, geoms)
+        rows.append(dict(table="T3", dataset=ds, fmt="shapefile", op="write", s=t["s"]))
+        with timer() as t:
+            read_shapefile(p)
+        rows.append(dict(table="T3", dataset=ds, fmt="shapefile", op="read", s=t["s"]))
+        os.unlink(p)
+
+        p = tmppath(".geojson")
+        with timer() as t:
+            write_geojson(p, geoms)
+        rows.append(dict(table="T3", dataset=ds, fmt="geojson", op="write", s=t["s"]))
+        with timer() as t:
+            read_geojson(p)
+        rows.append(dict(table="T3", dataset=ds, fmt="geojson", op="read", s=t["s"]))
+        os.unlink(p)
+    return rows
+
+
+def summarize(rows) -> list[str]:
+    out = ["# Table 3: write/read seconds (uncompressed)"]
+    for ds in ("PT", "TR", "MB", "eB"):
+        sub = [r for r in rows if r["dataset"] == ds]
+        line = [f"T3 {ds}:"]
+        for r in sub:
+            line.append(f"{r['fmt']}.{r['op']}={r['s']:.2f}s")
+        out.append(" ".join(line))
+    return out

@@ -1,0 +1,74 @@
+"""Paper Table 2: output size in MB with/without compression, 4 formats x 4
+datasets. Expectation from the paper: SpatialParquet(FP-delta) smallest
+uncompressed by ~2-4x; GeoJSON largest uncompressed but competitive gzipped
+(whole-file gzip); WKB-based formats in between."""
+
+from __future__ import annotations
+
+import os
+
+from repro.baselines.geojson_format import write_geojson
+from repro.baselines.geoparquet_like import GeoParquetLikeWriter
+from repro.baselines.shapefile import write_shapefile
+from repro.core.writer import write_file
+
+from .common import dataset_geometries, file_mb, make_dataset, timer, tmppath
+
+
+def run(scale: float = 1.0, datasets=("PT", "TR", "MB", "eB")) -> list[dict]:
+    rows = []
+    for ds in datasets:
+        cols = make_dataset(ds, scale, sort="hilbert")
+        geoms = dataset_geometries(cols)
+        npts = cols.n_values
+        for codec, tag in (("none", "uncompressed"), ("gzip", "gzip")):
+            # --- SpatialParquet (hilbert-sorted, like the paper's §5.1 setup)
+            p = tmppath(".spqf")
+            with timer() as t:
+                write_file(p, columns=cols, sort=None, codec=codec,
+                           row_group_records=1 << 20)
+            rows.append(dict(table="T2", dataset=ds, fmt="spatialparquet",
+                             codec=tag, mb=file_mb(p), write_s=t["s"], n_points=npts))
+            os.unlink(p)
+            # --- GeoParquet-like (WKB + MBR columns)
+            p = tmppath(".gpq")
+            with timer() as t:
+                with GeoParquetLikeWriter(p, codec=codec) as w:
+                    w.write_geometries(geoms)
+            rows.append(dict(table="T2", dataset=ds, fmt="geoparquet",
+                             codec=tag, mb=file_mb(p), write_s=t["s"], n_points=npts))
+            os.unlink(p)
+            # --- Shapefile (gzip applied per part file, as in the paper)
+            p = tmppath(".shp")
+            with timer() as t:
+                write_shapefile(p, geoms)
+                if codec == "gzip":
+                    import gzip as _gz
+                    blob = _gz.compress(open(p, "rb").read(), 6)
+                    open(p, "wb").write(blob)
+            rows.append(dict(table="T2", dataset=ds, fmt="shapefile",
+                             codec=tag, mb=file_mb(p), write_s=t["s"], n_points=npts))
+            os.unlink(p)
+            # --- GeoJSON (whole-file gzip)
+            p = tmppath(".geojson")
+            with timer() as t:
+                write_geojson(p, geoms, gz=(codec == "gzip"))
+            rows.append(dict(table="T2", dataset=ds, fmt="geojson",
+                             codec=tag, mb=file_mb(p), write_s=t["s"], n_points=npts))
+            os.unlink(p)
+    return rows
+
+
+def summarize(rows) -> list[str]:
+    out = ["# Table 2: size MB (uncompressed | gzip)"]
+    for ds in ("PT", "TR", "MB", "eB"):
+        line = [f"T2 {ds}:"]
+        for fmt in ("spatialparquet", "geoparquet", "shapefile", "geojson"):
+            u = next((r["mb"] for r in rows if r["dataset"] == ds and r["fmt"] == fmt
+                      and r["codec"] == "uncompressed"), None)
+            g = next((r["mb"] for r in rows if r["dataset"] == ds and r["fmt"] == fmt
+                      and r["codec"] == "gzip"), None)
+            if u is not None:
+                line.append(f"{fmt}={u:.1f}|{g:.1f}")
+        out.append(" ".join(line))
+    return out

@@ -1,0 +1,64 @@
+"""Shared helpers for the paper-table benchmarks."""
+
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+from contextlib import contextmanager
+
+import numpy as np
+
+from repro.core.columnar import GeometryColumns, assemble
+from repro.data.synthetic import DATASETS
+
+# dataset scales (records) at scale=1.0 — structure-matched, size-reduced
+# analogs of paper Table 1 (see DESIGN.md §10)
+SCALE_1 = {
+    "PT": dict(n_traj=8_000),        # ~0.4M points, MultiPoint
+    "TR": dict(n_roads=30_000),      # ~1.0M points, MultiLineString
+    "MB": dict(n_buildings=80_000),  # 0.4M points, Polygon
+    "eB": dict(n_points=400_000),    # 0.4M points, Point
+}
+
+
+def make_dataset(name: str, scale: float = 1.0, sort: str | None = None) -> GeometryColumns:
+    kw = {k: max(int(v * scale), 10) for k, v in SCALE_1[name].items()}
+    cols = DATASETS[name](**kw)
+    if sort:
+        # paper §5.1: "the source data for writing these files are sorted
+        # using the Hilbert-curve method" — applied to ALL formats equally
+        from repro.core.sfc import sort_keys
+        from repro.core.writer import permute_records, record_centroids
+
+        cx, cy = record_centroids(cols)
+        keys = sort_keys(cx, cy, sort)
+        cols = permute_records(cols, np.argsort(keys, kind="stable"))
+    return cols
+
+
+def dataset_geometries(cols: GeometryColumns):
+    return assemble(cols)
+
+
+@contextmanager
+def timer():
+    box = {}
+    t0 = time.perf_counter()
+    yield box
+    box["s"] = time.perf_counter() - t0
+
+
+def tmppath(suffix=""):
+    fd, p = tempfile.mkstemp(suffix=suffix)
+    os.close(fd)
+    os.unlink(p)
+    return p
+
+
+def file_mb(path) -> float:
+    return os.path.getsize(path) / 1e6
+
+
+def fmt_row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

@@ -1,0 +1,95 @@
+"""Vectorized arbitrary-width bit packing.
+
+This is the host-side (numpy) bit plane used by the FP-delta codec
+(:mod:`repro.core.fp_delta`). Values are packed LSB-first into a stream of
+little-endian ``uint64`` words: a value written at bit offset ``o`` with width
+``w`` occupies bits ``o .. o+w-1`` of the stream, where bit ``b`` of the stream
+is bit ``b % 64`` of word ``b // 64``.
+
+Everything here is fully vectorized — there are no per-value Python loops.
+Writes use ``np.bitwise_or.at`` scatter (values may share words); reads use
+gather + shift + mask.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+_U64 = np.uint64
+_ONE = _U64(1)
+_FULL = _U64(0xFFFFFFFFFFFFFFFF)
+
+
+def width_mask(width) -> np.ndarray:
+    """All-ones mask of ``width`` bits (vectorized; width==64 -> full mask)."""
+    w = np.asarray(width, dtype=_U64)
+    # (1 << 64) is undefined; route width==64 through the full mask.
+    shifted = np.where(w >= _U64(64), _FULL, (_ONE << (w % _U64(64))) - _ONE)
+    return np.where(w == _U64(0), _U64(0), shifted)
+
+
+def pack_tokens(values: np.ndarray, widths: np.ndarray) -> tuple[np.ndarray, int]:
+    """Pack ``values[i]`` at width ``widths[i]`` bits, consecutively.
+
+    Returns ``(words, total_bits)`` where ``words`` is a uint64 array with one
+    trailing spill word so readers may always gather ``words[idx + 1]``.
+    """
+    values = np.ascontiguousarray(values, dtype=_U64)
+    widths = np.ascontiguousarray(widths, dtype=np.int64)
+    if values.shape != widths.shape or values.ndim != 1:
+        raise ValueError("values/widths must be equal-length 1-D arrays")
+    ends = np.cumsum(widths, dtype=np.int64)
+    total_bits = int(ends[-1]) if len(ends) else 0
+    starts = ends - widths
+    nwords = (total_bits + 63) // 64 + 1  # +1 spill word
+    words = np.zeros(nwords, dtype=_U64)
+    if not len(values):
+        return words, 0
+    v = values & width_mask(widths)
+    word_idx = (starts >> 6).astype(np.int64)
+    shift = (starts & 63).astype(_U64)
+    lo = v << shift
+    # High spill: v >> (64 - shift); shift-by-64 is undefined, mask the case out.
+    inv = (_U64(64) - shift) & _U64(63)
+    hi = np.where(shift == _U64(0), _U64(0), v >> inv)
+    np.bitwise_or.at(words, word_idx, lo)
+    np.bitwise_or.at(words, word_idx + 1, hi)
+    return words, total_bits
+
+
+def unpack_fixed(words: np.ndarray, start_bit: int, count: int, width: int) -> np.ndarray:
+    """Read ``count`` consecutive ``width``-bit values starting at ``start_bit``.
+
+    ``words`` must have the trailing spill word produced by :func:`pack_tokens`
+    (or :func:`pad_words`).
+    """
+    if count <= 0:
+        return np.zeros(0, dtype=_U64)
+    if width == 0:
+        return np.zeros(count, dtype=_U64)
+    offs = start_bit + np.int64(width) * np.arange(count, dtype=np.int64)
+    word_idx = (offs >> 6).astype(np.int64)
+    shift = (offs & 63).astype(_U64)
+    lo = words[word_idx] >> shift
+    inv = (_U64(64) - shift) & _U64(63)
+    hi = np.where(shift == _U64(0), _U64(0), words[word_idx + 1] << inv)
+    return (lo | hi) & width_mask(width)
+
+
+def read_one(words: np.ndarray, start_bit: int, width: int) -> int:
+    """Scalar read of a single value (header parsing)."""
+    return int(unpack_fixed(words, start_bit, 1, width)[0])
+
+
+def words_to_bytes(words: np.ndarray, total_bits: int) -> bytes:
+    """Serialize the packed stream to the minimal little-endian byte string."""
+    nbytes = (total_bits + 7) // 8
+    return words.astype("<u8").tobytes()[:nbytes]
+
+
+def bytes_to_words(buf: bytes) -> np.ndarray:
+    """Parse a byte string back into a uint64 word array with a spill word."""
+    pad = (-len(buf)) % 8
+    padded = buf + b"\x00" * pad
+    words = np.frombuffer(padded, dtype="<u8").astype(_U64)
+    return np.concatenate([words, np.zeros(1, dtype=_U64)])

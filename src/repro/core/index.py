@@ -1,0 +1,76 @@
+"""The light-weight spatial index (paper §4).
+
+The index *is* the per-page [min,max] column statistics: together the x and y
+ranges of page ``i`` form its bounding box. A query rectangle
+``(xmin, ymin, xmax, ymax)`` is split into the two 1-D ranges and pages whose
+boxes miss either range are skipped without being read (or decompressed).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+
+@dataclass
+class PageIndexEntry:
+    row_group: int
+    page: int
+    bbox: tuple[float, float, float, float]  # xmin, ymin, xmax, ymax
+    rec_start: int
+    rec_count: int
+    nbytes: int  # stored bytes of x+y pages (for pruning accounting)
+
+
+class SpatialIndex:
+    """In-memory view of the footer statistics with vectorized pruning."""
+
+    def __init__(self, footer: dict):
+        entries: list[PageIndexEntry] = []
+        for rg_i, rg in enumerate(footer["row_groups"]):
+            xp, yp = rg["x_pages"], rg["y_pages"]
+            assert len(xp) == len(yp), "x/y pages must be aligned"
+            for p_i, (px, py) in enumerate(zip(xp, yp)):
+                entries.append(
+                    PageIndexEntry(
+                        row_group=rg_i,
+                        page=p_i,
+                        bbox=(px["vmin"], py["vmin"], px["vmax"], py["vmax"]),
+                        rec_start=px["rec_start"],
+                        rec_count=px["rec_count"],
+                        nbytes=px["nbytes"] + py["nbytes"],
+                    )
+                )
+        self.entries = entries
+        if entries:
+            b = np.array([e.bbox for e in entries], dtype=np.float64)
+            self._xmin, self._ymin, self._xmax, self._ymax = b.T
+        else:
+            self._xmin = self._ymin = self._xmax = self._ymax = np.zeros(0)
+
+    def __len__(self) -> int:
+        return len(self.entries)
+
+    @property
+    def total_bytes(self) -> int:
+        return int(sum(e.nbytes for e in self.entries))
+
+    def query(self, bbox: tuple[float, float, float, float] | None) -> np.ndarray:
+        """Indices of pages intersecting ``bbox`` (all pages if None)."""
+        if bbox is None:
+            return np.arange(len(self.entries))
+        qx0, qy0, qx1, qy1 = bbox
+        hit = (
+            (self._xmin <= qx1)
+            & (self._xmax >= qx0)
+            & (self._ymin <= qy1)
+            & (self._ymax >= qy0)
+        )
+        return np.flatnonzero(hit)
+
+    def selectivity(self, bbox) -> float:
+        """Fraction of pages the query must read (1.0 = no pruning)."""
+        if not len(self.entries):
+            return 0.0
+        return len(self.query(bbox)) / len(self.entries)

@@ -1,0 +1,131 @@
+"""Page-level encode/decode: FP-delta or raw, plus general-purpose compression.
+
+A *page* is the minimum reading unit (paper Appendix A.2): ~1MB of one
+column's values, record-aligned so the light-weight index can skip whole
+records. Each page is encoded (FP-delta §3 / raw) then optionally compressed
+(gzip per the paper's experiments, or zstd as a modern extension) and carries
+[min, max] statistics (§4).
+"""
+
+from __future__ import annotations
+
+import zlib
+from dataclasses import dataclass, field
+
+import numpy as np
+
+try:
+    import zstandard as _zstd
+except ImportError:  # pragma: no cover - zstd optional
+    _zstd = None
+
+from .fp_delta import fp_delta_decode, fp_delta_encode
+
+ENC_FP_DELTA = "fp_delta"
+ENC_RAW = "raw"
+
+CODEC_NONE = "none"
+CODEC_GZIP = "gzip"
+CODEC_ZSTD = "zstd"
+
+
+def compress(buf: bytes, codec: str) -> bytes:
+    if codec == CODEC_NONE:
+        return buf
+    if codec == CODEC_GZIP:
+        return zlib.compress(buf, 6)
+    if codec == CODEC_ZSTD:
+        if _zstd is None:  # pragma: no cover
+            raise RuntimeError("zstandard not available")
+        return _zstd.ZstdCompressor(level=3).compress(buf)
+    raise ValueError(f"unknown codec {codec!r}")
+
+
+def decompress(buf: bytes, codec: str) -> bytes:
+    if codec == CODEC_NONE:
+        return buf
+    if codec == CODEC_GZIP:
+        return zlib.decompress(buf)
+    if codec == CODEC_ZSTD:
+        if _zstd is None:  # pragma: no cover
+            raise RuntimeError("zstandard not available")
+        return _zstd.ZstdDecompressor().decompress(buf)
+    raise ValueError(f"unknown codec {codec!r}")
+
+
+@dataclass
+class PageMeta:
+    """Footer metadata for one page (offsets are file-absolute)."""
+
+    offset: int
+    nbytes: int
+    count: int              # number of values
+    rec_start: int          # first record (row-group relative)
+    rec_count: int
+    vmin: float
+    vmax: float
+    encoding: str
+    n_bits: int             # FP-delta n* (0 => raw mode inside fp_delta)
+    n_resets: int
+
+    def to_dict(self) -> dict:
+        return self.__dict__.copy()
+
+    @staticmethod
+    def from_dict(d: dict) -> "PageMeta":
+        return PageMeta(**d)
+
+
+def encode_page(values: np.ndarray, encoding: str, codec: str) -> tuple[bytes, dict]:
+    """Encode one page of numeric values; returns (bytes, stats dict)."""
+    values = np.ascontiguousarray(values)
+    if encoding == ENC_FP_DELTA:
+        payload, st = fp_delta_encode(values)
+        n_bits, n_resets = st.n_bits, st.n_resets
+    elif encoding == ENC_RAW:
+        payload, n_bits, n_resets = values.tobytes(), 0, 0
+    else:
+        raise ValueError(f"unknown encoding {encoding!r}")
+    out = compress(payload, codec)
+    stats = {
+        "n_bits": n_bits,
+        "n_resets": n_resets,
+        "raw_nbytes": values.nbytes,
+        "encoded_nbytes": len(payload),
+        "stored_nbytes": len(out),
+    }
+    return out, stats
+
+
+def decode_page(buf: bytes, meta: PageMeta, dtype, codec: str) -> np.ndarray:
+    payload = decompress(buf, codec)
+    if meta.encoding == ENC_FP_DELTA:
+        return fp_delta_decode(payload, meta.count, dtype)
+    if meta.encoding == ENC_RAW:
+        return np.frombuffer(payload, dtype=dtype, count=meta.count).copy()
+    raise ValueError(f"unknown encoding {meta.encoding!r}")
+
+
+def plan_page_splits(
+    record_value_starts: np.ndarray, n_values: int, page_values: int
+) -> list[tuple[int, int]]:
+    """Record-aligned page boundaries targeting ``page_values`` per page.
+
+    Returns a list of (rec_start, rec_stop) per page. Records bigger than a
+    page get a page of their own (a page always holds >= 1 record).
+    """
+    n_records = len(record_value_starts)
+    if n_records == 0:
+        return []
+    bounds = np.append(record_value_starts, n_values)
+    pages: list[tuple[int, int]] = []
+    r = 0
+    while r < n_records:
+        target = bounds[r] + page_values
+        # furthest record whose values end within the target
+        nxt = int(np.searchsorted(bounds, target, side="right")) - 1
+        nxt = max(nxt, r + 1)
+        nxt = min(nxt, n_records)
+        pages.append((r, nxt))
+        r = nxt
+    return pages

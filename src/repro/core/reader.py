@@ -1,0 +1,214 @@
+"""Spatial Parquet file reader: projection, range-filter pushdown, pruning.
+
+The reader exposes two access paths:
+
+* ``read(...)`` — the object API returning :class:`Geometry` lists (paper's
+  reported read path), and
+* ``read_columnar(...)`` — direct access to the decoded coordinate arrays.
+  The paper (§5.1) names exactly this as the fix for its read-speed gap
+  ("providing a lower-level access to the coordinate arrays from Parquet
+  rather than reading one value at a time"); it is our primary fast path and
+  what the training data pipeline consumes.
+"""
+
+from __future__ import annotations
+
+import struct
+from dataclasses import dataclass, field
+
+import msgpack
+import numpy as np
+
+from .columnar import GeometryColumns, assemble
+from .geometry import Geometry, bbox_intersects
+from .index import SpatialIndex
+from .pages import PageMeta, decode_page, decompress
+from .rle import decode_levels, rle_decode
+from .writer import MAGIC, concat_columns, permute_records
+
+
+@dataclass
+class ReadStats:
+    """Pruning accounting for the light-weight index (paper Figure 11)."""
+
+    pages_total: int = 0
+    pages_read: int = 0
+    bytes_total: int = 0
+    bytes_read: int = 0
+    records_scanned: int = 0
+    records_returned: int = 0
+
+    @property
+    def pages_skipped(self) -> int:
+        return self.pages_total - self.pages_read
+
+
+class SpatialParquetReader:
+    def __init__(self, path):
+        self.path = str(path)
+        self._fh = open(self.path, "rb")
+        self.footer = self._read_footer()
+        self.coord_dtype = np.dtype(self.footer["coord_dtype"])
+        self.codec = self.footer["codec"]
+        self.n_records = self.footer["n_records"]
+        self.extra_schema = self.footer.get("extra_schema", {})
+        self.index = SpatialIndex(self.footer)
+
+    def close(self):
+        self._fh.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    # ------------------------------------------------------------- internals
+    def _read_footer(self) -> dict:
+        fh = self._fh
+        fh.seek(0)
+        if fh.read(len(MAGIC)) != MAGIC:
+            raise ValueError("not a Spatial Parquet file (bad leading magic)")
+        fh.seek(-(len(MAGIC) + 4), 2)
+        (flen,) = struct.unpack("<I", fh.read(4))
+        if fh.read(len(MAGIC)) != MAGIC:
+            raise ValueError("truncated Spatial Parquet file (bad trailing magic)")
+        fh.seek(-(len(MAGIC) + 4 + flen), 2)
+        return msgpack.unpackb(fh.read(flen), raw=False, strict_map_key=False)
+
+    def _blob(self, meta: dict) -> bytes:
+        self._fh.seek(meta["offset"])
+        return self._fh.read(meta["nbytes"])
+
+    def _levels(self, rg: dict) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+        types = rle_decode(decompress(self._blob(rg["type"]), self.codec))
+        type_rep = decode_levels(decompress(self._blob(rg["type_rep"]), self.codec))
+        rep = decode_levels(decompress(self._blob(rg["rep"]), self.codec))
+        defn = decode_levels(decompress(self._blob(rg["defn"]), self.codec))
+        return types, type_rep, rep, defn
+
+    def _decode_coord_page(self, page_dict: dict) -> np.ndarray:
+        meta = PageMeta.from_dict(page_dict)
+        return decode_page(self._blob(page_dict), meta, self.coord_dtype, self.codec)
+
+    # -------------------------------------------------------------- read API
+    def read_columnar(
+        self,
+        bbox=None,
+        columns: tuple[str, ...] | None = None,
+        refine: bool = False,
+    ) -> tuple[GeometryColumns | None, dict[str, np.ndarray], ReadStats]:
+        """Decode records whose *page* bbox intersects ``bbox``.
+
+        Returns (geometry columns, extra columns, stats). ``refine=True``
+        additionally drops records whose exact bbox misses the query.
+        ``columns`` restricts which extra columns decode ("geometry" is
+        implied unless columns excludes it explicitly).
+        """
+        want_geom = columns is None or "geometry" in columns
+        want_extra = (
+            list(self.extra_schema)
+            if columns is None
+            else [c for c in columns if c in self.extra_schema]
+        )
+        stats = ReadStats(
+            pages_total=len(self.index),
+            bytes_total=self.index.total_bytes,
+        )
+        hit = self.index.query(bbox)
+        hit_set: dict[int, list[int]] = {}
+        for idx in hit:
+            e = self.index.entries[idx]
+            hit_set.setdefault(e.row_group, []).append(e.page)
+
+        geo_parts: list[GeometryColumns] = []
+        extra_parts: dict[str, list[np.ndarray]] = {k: [] for k in want_extra}
+        for rg_i, rg in enumerate(self.footer["row_groups"]):
+            pages = sorted(hit_set.get(rg_i, []))
+            if not pages:
+                continue
+            stats.pages_read += len(pages)
+            types, type_rep, rep, defn = self._levels(rg)
+            slot_starts = np.flatnonzero(rep == 0)
+            type_starts = np.flatnonzero(type_rep == 0)
+            n_rec = len(slot_starts)
+            value_off = np.cumsum(defn.astype(np.int64)) - defn
+            # merge contiguous pages into runs
+            runs: list[list[int]] = [[pages[0]]]
+            for p in pages[1:]:
+                if p == runs[-1][-1] + 1:
+                    runs[-1].append(p)
+                else:
+                    runs.append([p])
+            xp, yp = rg["x_pages"], rg["y_pages"]
+            for run in runs:
+                r0 = xp[run[0]]["rec_start"]
+                r1 = xp[run[-1]]["rec_start"] + xp[run[-1]]["rec_count"]
+                stats.records_scanned += r1 - r0
+                if want_geom:
+                    xs = [self._decode_coord_page(xp[p]) for p in run]
+                    ys = [self._decode_coord_page(yp[p]) for p in run]
+                    stats.bytes_read += sum(xp[p]["nbytes"] + yp[p]["nbytes"] for p in run)
+                    s0 = slot_starts[r0]
+                    s1 = slot_starts[r1] if r1 < n_rec else len(rep)
+                    t0 = type_starts[r0]
+                    t1 = type_starts[r1] if r1 < n_rec else len(types)
+                    geo_parts.append(
+                        GeometryColumns(
+                            types[t0:t1], type_rep[t0:t1].copy(),
+                            rep[s0:s1].copy(), defn[s0:s1],
+                            np.concatenate(xs), np.concatenate(ys),
+                        )
+                    )
+                    # the first slot of a run always starts a record
+                    geo_parts[-1].rep[0] = 0
+                    geo_parts[-1].type_rep[0] = 0
+                for k in want_extra:
+                    ep = rg["extra"][k]
+                    chunk = [
+                        decode_page(
+                            self._blob(ep[p]), PageMeta.from_dict(ep[p]),
+                            np.dtype(self.extra_schema[k]), self.codec,
+                        )
+                        for p in run
+                    ]
+                    extra_parts[k].append(np.concatenate(chunk))
+
+        geo = concat_columns(geo_parts) if geo_parts else None
+        extras = {
+            k: (np.concatenate(v) if v else np.zeros(0, np.dtype(self.extra_schema[k])))
+            for k, v in extra_parts.items()
+        }
+        if refine and bbox is not None and geo is not None:
+            keep = _records_intersecting(geo, bbox)
+            geo = permute_records(geo, keep)
+            extras = {k: v[keep] for k, v in extras.items()}
+        stats.records_returned = geo.n_records if geo is not None else (
+            len(next(iter(extras.values()))) if extras else 0
+        )
+        return geo, extras, stats
+
+    def read(self, bbox=None, refine: bool = False) -> tuple[list[Geometry], ReadStats]:
+        """Object-API read returning Geometry instances."""
+        geo, _, stats = self.read_columnar(bbox=bbox, refine=refine)
+        return (assemble(geo) if geo is not None else []), stats
+
+
+def _records_intersecting(cols: GeometryColumns, bbox) -> np.ndarray:
+    """Vectorized exact per-record bbox test (refinement step)."""
+    starts = cols.record_value_starts()
+    counts = np.diff(np.append(starts, cols.n_values))
+    n_rec = cols.n_records
+    keep = np.zeros(n_rec, dtype=bool)
+    nz = counts > 0
+    if nz.any():
+        s = starts[nz]
+        x = cols.x.astype(np.float64, copy=False)
+        y = cols.y.astype(np.float64, copy=False)
+        xmin = np.minimum.reduceat(x, s)
+        xmax = np.maximum.reduceat(x, s)
+        ymin = np.minimum.reduceat(y, s)
+        ymax = np.maximum.reduceat(y, s)
+        qx0, qy0, qx1, qy1 = bbox
+        keep[nz] = (xmin <= qx1) & (xmax >= qx0) & (ymin <= qy1) & (ymax >= qy0)
+    return np.flatnonzero(keep)

@@ -1,0 +1,5 @@
+from .kernel import flash_attention
+from .ops import attention
+from .ref import attention_ref
+
+__all__ = ["attention", "flash_attention", "attention_ref"]

@@ -1,0 +1,127 @@
+"""Pallas TPU flash attention (blocked online softmax).
+
+Grid is (batch*heads, q_blocks, k_blocks) with the k dimension innermost and
+sequential; running max / denominator / accumulator live in VMEM scratch and
+the output block is emitted on the last k step. Causal blocks that are fully
+masked are skipped with ``pl.when`` (zero FLOPs — the dominant saving for
+long sequences). BlockSpecs tile Q/K/V into (block, head_dim) VMEM windows so
+the working set is O(block_q*D + 2*block_k*D) regardless of sequence length —
+the HBM→VMEM streaming pattern that replaces GPU shared-memory tiling on TPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+    *, sm_scale: float, causal: bool, block_q: int, block_k: int, seq_k: int,
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+    sq = pl.num_programs(1) * block_q
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # causal (decode-aligned): query row r sees key col c iff c <= r + offset
+    diag_offset = seq_k - sq
+    q_start = qi * block_q
+    k_start = ki * block_k
+
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)  # (block_q, D)
+        k = k_ref[0].astype(jnp.float32)  # (block_k, D)
+        v = v_ref[0].astype(jnp.float32)
+        logits = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        ) * sm_scale  # (block_q, block_k)
+        if causal:
+            rows = q_start + jax.lax.broadcasted_iota(jnp.int32, logits.shape, 0)
+            cols = k_start + jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
+            logits = jnp.where(cols <= rows + diag_offset, logits, NEG_INF)
+        m_prev = m_scr[...]                       # (block_q, 1)
+        m_cur = jnp.max(logits, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(logits - m_new)               # (block_q, block_k)
+        alpha = jnp.exp(m_prev - m_new)           # (block_q, 1)
+        l_scr[...] = alpha * l_scr[...] + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_scr[...] = m_new
+
+    if causal:
+        # skip blocks strictly above the (offset) diagonal
+        pl.when(k_start <= q_start + block_q - 1 + diag_offset)(_compute)
+    else:
+        _compute()
+
+    @pl.when(ki == nk - 1)
+    def _emit():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "sm_scale", "block_q", "block_k", "interpret"),
+)
+def flash_attention(
+    q: jnp.ndarray,  # (B, H, Sq, D)
+    k: jnp.ndarray,  # (B, H, Sk, D)
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    sm_scale: float | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    b, h, sq, d = q.shape
+    sk = k.shape[2]
+    assert k.shape == (b, h, sk, d) and v.shape == (b, h, sk, d)
+    assert sq % block_q == 0 and sk % block_k == 0, (sq, sk, block_q, block_k)
+    if sm_scale is None:
+        sm_scale = 1.0 / (d**0.5)
+    qf = q.reshape(b * h, sq, d)
+    kf = k.reshape(b * h, sk, d)
+    vf = v.reshape(b * h, sk, d)
+    grid = (b * h, sq // block_q, sk // block_k)
+    out = pl.pallas_call(
+        functools.partial(
+            _flash_kernel,
+            sm_scale=float(sm_scale),
+            causal=causal,
+            block_q=block_q,
+            block_k=block_k,
+            seq_k=sk,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, block_k, d), lambda bh, qi, ki: (bh, ki, 0)),
+            pl.BlockSpec((1, block_k, d), lambda bh, qi, ki: (bh, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, h, sq, d)

@@ -1,0 +1,29 @@
+"""Oracle for the flash-attention kernel: plain softmax attention in jnp."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(
+    q: jnp.ndarray,  # (B, H, Sq, D)
+    k: jnp.ndarray,  # (B, H, Sk, D)
+    v: jnp.ndarray,  # (B, H, Sk, D)
+    *,
+    causal: bool = True,
+    sm_scale: float | None = None,
+) -> jnp.ndarray:
+    if sm_scale is None:
+        sm_scale = 1.0 / (q.shape[-1] ** 0.5)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k, preferred_element_type=jnp.float32)
+    logits = logits * sm_scale
+    if causal:
+        sq, sk = q.shape[2], k.shape[2]
+        # decode-style alignment: query i attends to keys <= i + (sk - sq)
+        mask = jnp.arange(sk)[None, :] <= (jnp.arange(sq)[:, None] + (sk - sq))
+        logits = jnp.where(mask[None, None], logits, NEG_INF)
+    p = jnp.exp(logits - jnp.max(logits, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), v)

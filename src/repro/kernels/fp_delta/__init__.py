@@ -1,0 +1,24 @@
+from .ops import (
+    MiniblockStream,
+    compress_array,
+    decode,
+    decompress_array,
+    encode,
+    from_bytes,
+    to_bytes,
+)
+from .ref import MINIBLOCK, WIDTHS, decode_blocks_ref, encode_blocks_ref
+
+__all__ = [
+    "MiniblockStream",
+    "encode",
+    "decode",
+    "to_bytes",
+    "from_bytes",
+    "compress_array",
+    "decompress_array",
+    "encode_blocks_ref",
+    "decode_blocks_ref",
+    "MINIBLOCK",
+    "WIDTHS",
+]

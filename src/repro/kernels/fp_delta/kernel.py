@@ -1,0 +1,147 @@
+"""Pallas TPU kernels for miniblock FP-delta encode/decode (v2: patched).
+
+TPU adaptation of Spatial Parquet §3 (see DESIGN.md §5 and ref.py for the
+format contract). Each grid step processes one miniblock of 1024 float32
+values — exactly one (8, 128) VPU tile — entirely in VMEM:
+
+* encode: bitcast → in-block delta (the anchor makes ``delta[0] = 0``, so no
+  cross-block carry exists) → zigzag → exact significant-bit ladder →
+  cost-optimal lane-aligned width → all six packings computed with static
+  shapes and combined with a masked sum; exceptions (FastPFOR-style patches
+  for deltas wider than w) are compacted with a (MAX_EXC, 1024) one-hot
+  contraction against iota — data-independent control flow, no scatter.
+* decode: the mirror image; exceptions re-injected with the same one-hot
+  trick, and the sequential prefix sum replaced by a log2(1024) = 10-step
+  shifted-add scan (VPU-parallel).
+
+Grid iteration over miniblocks is embarrassingly parallel.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import (
+    MAX_EXC,
+    MINIBLOCK,
+    WIDTHS,
+    choose_width,
+    extract_exceptions,
+    inject_exceptions,
+    pack_candidate,
+    significant_bits_u32,
+    unpack_candidate,
+    unzigzag_u32,
+    zigzag_i32,
+)
+
+_BLOCK_2D = (8, 128)  # 1024 values as one VPU tile
+
+
+def _encode_kernel(x_ref, packed_ref, width_ref, anchor_ref,
+                   exc_idx_ref, exc_val_ref, count_ref):
+    x = x_ref[...].reshape(MINIBLOCK)
+    xi = jax.lax.bitcast_convert_type(x, jnp.int32)
+    prev = jnp.concatenate([xi[:1], xi[:-1]])
+    zig = zigzag_i32(xi - prev)  # delta[0] == 0 by construction
+    nbits = significant_bits_u32(zig)
+    width, _ = choose_width(nbits[None, :])
+    width = width[0]
+    exc_idx, exc_val, count = extract_exceptions(zig, width)
+    packed = jnp.zeros(MINIBLOCK, dtype=jnp.uint32)
+    for w in WIDTHS:  # static unroll; masked sum select (fields disjoint)
+        packed = packed + jnp.where(width == w, pack_candidate(zig, w), jnp.uint32(0))
+    packed_ref[...] = packed.astype(jnp.int32).reshape(1, *_BLOCK_2D)
+    width_ref[0, 0] = width
+    anchor_ref[0, 0] = xi[0]
+    exc_idx_ref[...] = exc_idx.reshape(1, MAX_EXC)
+    exc_val_ref[...] = exc_val.astype(jnp.int32).reshape(1, MAX_EXC)
+    count_ref[0, 0] = count
+
+
+def _decode_kernel(packed_ref, width_ref, anchor_ref,
+                   exc_idx_ref, exc_val_ref, count_ref, x_ref):
+    words = packed_ref[...].reshape(MINIBLOCK).astype(jnp.uint32)
+    width = width_ref[0, 0]
+    anchor = anchor_ref[0, 0]
+    zig = jnp.zeros(MINIBLOCK, dtype=jnp.uint32)
+    for w in WIDTHS:
+        zig = zig + jnp.where(width == w, unpack_candidate(words, w), jnp.uint32(0))
+    zig = inject_exceptions(
+        zig, exc_idx_ref[...].reshape(MAX_EXC),
+        exc_val_ref[...].reshape(MAX_EXC).astype(jnp.uint32), count_ref[0, 0],
+    )
+    delta = unzigzag_u32(zig)
+    # log-step inclusive prefix sum (10 shifted adds on the VPU)
+    acc = delta
+    shift = 1
+    while shift < MINIBLOCK:
+        shifted = jnp.concatenate([jnp.zeros(shift, jnp.int32), acc[:-shift]])
+        acc = acc + shifted
+        shift *= 2
+    xi = anchor + acc
+    x_ref[...] = jax.lax.bitcast_convert_type(xi, jnp.float32).reshape(1, *_BLOCK_2D)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def encode_blocks(x: jnp.ndarray, *, interpret: bool = True):
+    """x: (n_blocks, MINIBLOCK) float32 -> (packed, widths, anchors, exc_idx,
+    exc_val, exc_count). Bit-identical to ref.encode_blocks_ref."""
+    n_blocks = x.shape[0]
+    assert x.shape == (n_blocks, MINIBLOCK), x.shape
+    x2 = x.reshape(n_blocks, *_BLOCK_2D)
+    outs = pl.pallas_call(
+        _encode_kernel,
+        grid=(n_blocks,),
+        in_specs=[pl.BlockSpec((1, *_BLOCK_2D), lambda b: (b, 0, 0))],
+        out_specs=[
+            pl.BlockSpec((1, *_BLOCK_2D), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, 1), lambda b: (b, 0)),
+            pl.BlockSpec((1, 1), lambda b: (b, 0)),
+            pl.BlockSpec((1, MAX_EXC), lambda b: (b, 0)),
+            pl.BlockSpec((1, MAX_EXC), lambda b: (b, 0)),
+            pl.BlockSpec((1, 1), lambda b: (b, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_blocks, *_BLOCK_2D), jnp.int32),
+            jax.ShapeDtypeStruct((n_blocks, 1), jnp.int32),
+            jax.ShapeDtypeStruct((n_blocks, 1), jnp.int32),
+            jax.ShapeDtypeStruct((n_blocks, MAX_EXC), jnp.int32),
+            jax.ShapeDtypeStruct((n_blocks, MAX_EXC), jnp.int32),
+            jax.ShapeDtypeStruct((n_blocks, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(x2)
+    packed, widths, anchors, exc_idx, exc_val, count = outs
+    return (packed.reshape(n_blocks, MINIBLOCK), widths[:, 0], anchors[:, 0],
+            exc_idx, exc_val, count[:, 0])
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def decode_blocks(packed, widths, anchors, exc_idx, exc_val, exc_count,
+                  *, interpret: bool = True):
+    """Inverse of encode_blocks -> (n_blocks, MINIBLOCK) float32."""
+    n_blocks = packed.shape[0]
+    assert packed.shape == (n_blocks, MINIBLOCK), packed.shape
+    p2 = packed.reshape(n_blocks, *_BLOCK_2D)
+    x = pl.pallas_call(
+        _decode_kernel,
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((1, *_BLOCK_2D), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, 1), lambda b: (b, 0)),
+            pl.BlockSpec((1, 1), lambda b: (b, 0)),
+            pl.BlockSpec((1, MAX_EXC), lambda b: (b, 0)),
+            pl.BlockSpec((1, MAX_EXC), lambda b: (b, 0)),
+            pl.BlockSpec((1, 1), lambda b: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, *_BLOCK_2D), lambda b: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_blocks, *_BLOCK_2D), jnp.float32),
+        interpret=interpret,
+    )(p2, widths.reshape(n_blocks, 1), anchors.reshape(n_blocks, 1),
+      exc_idx, exc_val, exc_count.reshape(n_blocks, 1))
+    return x.reshape(n_blocks, MINIBLOCK)

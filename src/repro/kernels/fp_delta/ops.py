@@ -1,0 +1,154 @@
+"""Jit'd user-facing wrappers around the miniblock FP-delta kernels (v2).
+
+Handles arbitrary-length inputs (padding with the last element — zero deltas
+are free), Pallas/ref dispatch, and host-side stream compaction to a compact
+byte format (used by checkpoint compression, :mod:`repro.train.checkpoint`).
+"""
+
+from __future__ import annotations
+
+import struct
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import kernel, ref
+from .ref import EXC_BITS, MAX_EXC, MINIBLOCK
+
+_MAGIC = b"FPD2"  # FP-Delta Miniblock v2 (patched)
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@dataclass
+class MiniblockStream:
+    """Device-resident encoded stream (dense, pre-compaction)."""
+
+    packed: jnp.ndarray     # (n_blocks, MINIBLOCK) int32, first w*32 words valid
+    widths: jnp.ndarray     # (n_blocks,) int32 in {0} | WIDTHS
+    anchors: jnp.ndarray    # (n_blocks,) int32
+    exc_idx: jnp.ndarray    # (n_blocks, MAX_EXC) int32
+    exc_val: jnp.ndarray    # (n_blocks, MAX_EXC) int32 (raw zigzag)
+    exc_count: jnp.ndarray  # (n_blocks,) int32
+    n_values: int           # unpadded element count
+
+    @property
+    def n_blocks(self) -> int:
+        return int(self.packed.shape[0])
+
+    def compact_bits(self) -> int:
+        """Size of the compacted stream in bits."""
+        return int(ref.stream_size_bits(self.widths, self.exc_count))
+
+
+def _pad_to_blocks(x) -> tuple[jnp.ndarray, int]:
+    x = jnp.asarray(x).reshape(-1)
+    if x.dtype == jnp.int32:
+        x = jax.lax.bitcast_convert_type(x, jnp.float32)
+    if x.dtype != jnp.float32:
+        raise TypeError(f"miniblock codec is 32-bit only, got {x.dtype}")
+    n = x.shape[0]
+    padded = ((n + MINIBLOCK - 1) // MINIBLOCK) * MINIBLOCK
+    if padded == 0:
+        padded = MINIBLOCK
+        x = jnp.zeros(MINIBLOCK, jnp.float32)
+    elif padded != n:
+        x = jnp.concatenate([x, jnp.broadcast_to(x[-1:], (padded - n,))])
+    return x.reshape(-1, MINIBLOCK), n
+
+
+def encode(x, *, use_pallas: bool = True, interpret: bool | None = None) -> MiniblockStream:
+    blocks, n = _pad_to_blocks(x)
+    if use_pallas:
+        interp = _default_interpret() if interpret is None else interpret
+        outs = kernel.encode_blocks(blocks, interpret=interp)
+    else:
+        outs = jax.jit(ref.encode_blocks_ref)(blocks)
+    return MiniblockStream(*outs, n)
+
+
+def decode(stream: MiniblockStream, *, use_pallas: bool = True,
+           interpret: bool | None = None, out_dtype=jnp.float32) -> jnp.ndarray:
+    args = (stream.packed, stream.widths, stream.anchors,
+            stream.exc_idx, stream.exc_val, stream.exc_count)
+    if use_pallas:
+        interp = _default_interpret() if interpret is None else interpret
+        x = kernel.decode_blocks(*args, interpret=interp)
+    else:
+        x = jax.jit(ref.decode_blocks_ref)(*args)
+    flat = x.reshape(-1)[: stream.n_values]
+    if out_dtype == jnp.int32:
+        return jax.lax.bitcast_convert_type(flat, jnp.int32)
+    return flat
+
+
+# ------------------------------------------------------------- host streaming
+def to_bytes(stream: MiniblockStream) -> bytes:
+    """Compact the dense device stream into contiguous bytes (host side)."""
+    packed = np.asarray(stream.packed)
+    widths = np.asarray(stream.widths).astype(np.uint8)
+    anchors = np.asarray(stream.anchors)
+    counts = np.asarray(stream.exc_count).astype(np.uint8)
+    exc_idx = np.asarray(stream.exc_idx).astype(np.uint16)
+    exc_val = np.asarray(stream.exc_val).astype("<i4")
+    n_blocks = len(widths)
+    valid = (widths.astype(np.int64) * MINIBLOCK) // 32
+    mask = np.arange(MINIBLOCK)[None, :] < valid[:, None]
+    payload = packed[mask]  # row-major → block order preserved
+    emask = np.arange(MAX_EXC)[None, :] < counts[:, None].astype(np.int64)
+    eidx = exc_idx[emask]
+    eval_ = exc_val[emask]
+    head = _MAGIC + struct.pack("<QI", stream.n_values, n_blocks)
+    return (head + widths.tobytes() + counts.tobytes()
+            + anchors.astype("<i4").tobytes()
+            + eidx.astype("<u2").tobytes() + eval_.tobytes()
+            + payload.astype("<i4").tobytes())
+
+
+def from_bytes(buf: bytes) -> MiniblockStream:
+    if buf[:4] != _MAGIC:
+        raise ValueError("not an FPD2 stream")
+    n_values, n_blocks = struct.unpack_from("<QI", buf, 4)
+    off = 4 + 12
+    widths = np.frombuffer(buf, np.uint8, n_blocks, off).astype(np.int32)
+    off += n_blocks
+    counts = np.frombuffer(buf, np.uint8, n_blocks, off).astype(np.int32)
+    off += n_blocks
+    anchors = np.frombuffer(buf, "<i4", n_blocks, off).astype(np.int32)
+    off += 4 * n_blocks
+    n_exc = int(counts.sum())
+    eidx = np.frombuffer(buf, "<u2", n_exc, off)
+    off += 2 * n_exc
+    eval_ = np.frombuffer(buf, "<i4", n_exc, off)
+    off += 4 * n_exc
+    valid = (widths.astype(np.int64) * MINIBLOCK) // 32
+    payload = np.frombuffer(buf, "<i4", int(valid.sum()), off)
+    packed = np.zeros((n_blocks, MINIBLOCK), np.int32)
+    mask = np.arange(MINIBLOCK)[None, :] < valid[:, None]
+    packed[mask] = payload
+    exc_idx = np.zeros((n_blocks, MAX_EXC), np.int32)
+    exc_val = np.zeros((n_blocks, MAX_EXC), np.int32)
+    emask = np.arange(MAX_EXC)[None, :] < counts[:, None]
+    exc_idx[emask] = eidx
+    exc_val[emask] = eval_
+    return MiniblockStream(
+        jnp.asarray(packed), jnp.asarray(widths), jnp.asarray(anchors),
+        jnp.asarray(exc_idx), jnp.asarray(exc_val), jnp.asarray(counts),
+        n_values,
+    )
+
+
+def compress_array(x: np.ndarray, **kw) -> bytes:
+    """One-shot lossless compression of a float32/int32 array (any shape)."""
+    return to_bytes(encode(np.asarray(x).reshape(-1), **kw))
+
+
+def decompress_array(buf: bytes, shape, dtype=np.float32, **kw) -> np.ndarray:
+    stream = from_bytes(buf)
+    want_i32 = np.dtype(dtype) == np.int32
+    flat = decode(stream, out_dtype=jnp.int32 if want_i32 else jnp.float32, **kw)
+    return np.asarray(flat).reshape(shape).view(dtype)

@@ -1,0 +1,4 @@
+from .ops import column_page_stats, page_minmax
+from .ref import minmax_ref
+
+__all__ = ["page_minmax", "column_page_stats", "minmax_ref"]

@@ -1,0 +1,60 @@
+"""Pallas TPU kernel: per-page [min,max] statistics (paper §4 index build).
+
+Grid is (n_pages, page_tiles): the page dimension is parallel, the tile
+dimension is sequential with VMEM scratch accumulation — pages of any size
+stream through a fixed (8, 128)-aligned VMEM tile, so the working set is
+constant regardless of page size.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_TILE = 2048  # values per grid step; multiple of (8, 128)
+
+
+def _minmax_kernel(x_ref, min_ref, max_ref):
+    t = pl.program_id(1)
+    x = x_ref[...]
+    tile_min = jnp.min(x)
+    tile_max = jnp.max(x)
+
+    @pl.when(t == 0)
+    def _init():
+        min_ref[0, 0] = tile_min
+        max_ref[0, 0] = tile_max
+
+    @pl.when(t > 0)
+    def _acc():
+        min_ref[0, 0] = jnp.minimum(min_ref[0, 0], tile_min)
+        max_ref[0, 0] = jnp.maximum(max_ref[0, 0], tile_max)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def minmax(x: jnp.ndarray, *, interpret: bool = True):
+    """x: (n_pages, page_size) -> ((n_pages,) min, (n_pages,) max).
+
+    page_size must be a multiple of _TILE; ops.py pads with edge values.
+    """
+    n_pages, page_size = x.shape
+    assert page_size % _TILE == 0, page_size
+    tiles = page_size // _TILE
+    mins, maxs = pl.pallas_call(
+        _minmax_kernel,
+        grid=(n_pages, tiles),
+        in_specs=[pl.BlockSpec((1, _TILE), lambda p, t: (p, t))],
+        out_specs=[
+            pl.BlockSpec((1, 1), lambda p, t: (p, 0)),
+            pl.BlockSpec((1, 1), lambda p, t: (p, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_pages, 1), x.dtype),
+            jax.ShapeDtypeStruct((n_pages, 1), x.dtype),
+        ],
+        interpret=interpret,
+    )(x)
+    return mins[:, 0], maxs[:, 0]

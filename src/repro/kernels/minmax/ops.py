@@ -1,0 +1,51 @@
+"""Wrapper for the page-statistics kernel: ragged pages, padding, dispatch."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import kernel, ref
+from .kernel import _TILE
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def page_minmax(
+    x: jnp.ndarray, *, use_pallas: bool = True, interpret: bool | None = None
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(n_pages, page_size) -> per-page (min, max); pads to the VMEM tile."""
+    x = jnp.asarray(x)
+    n_pages, page_size = x.shape
+    pad = (-page_size) % _TILE
+    if pad:
+        x = jnp.concatenate([x, jnp.broadcast_to(x[:, -1:], (n_pages, pad))], axis=1)
+    if not use_pallas:
+        return jax.jit(ref.minmax_ref)(x)
+    interp = _default_interpret() if interpret is None else interpret
+    return kernel.minmax(x, interpret=interp)
+
+
+def column_page_stats(values: np.ndarray, page_bounds: np.ndarray, **kw):
+    """Ragged host entry: per-page stats for record-aligned page bounds.
+
+    Used as the accelerated index-build path; equals what the writer computes
+    per page on the host.
+    """
+    values = np.asarray(values, dtype=np.float32)
+    out_min, out_max = [], []
+    for i in range(len(page_bounds) - 1):
+        chunk = values[page_bounds[i] : page_bounds[i + 1]]
+        if not len(chunk):
+            out_min.append(np.inf)
+            out_max.append(-np.inf)
+            continue
+        pad = (-len(chunk)) % _TILE
+        padded = np.concatenate([chunk, np.repeat(chunk[-1:], pad)]) if pad else chunk
+        mn, mx = page_minmax(padded.reshape(1, -1), **kw)
+        out_min.append(float(mn[0]))
+        out_max.append(float(mx[0]))
+    return np.array(out_min), np.array(out_max)

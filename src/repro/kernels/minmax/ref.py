@@ -1,0 +1,14 @@
+"""Oracle for the page min/max statistics kernel (paper §4 index build).
+
+Input: (n_pages, page_size) float32 column values.
+Output: (n_pages,) mins and (n_pages,) maxes — the per-page [min, max]
+statistics that *are* the light-weight spatial index.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def minmax_ref(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    return jnp.min(x, axis=1), jnp.max(x, axis=1)

@@ -1,0 +1,306 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove the distribution config is coherent at 512 chips.
+
+For every (architecture x input shape) cell this lowers + compiles the
+appropriate step — ``train_step`` (fwd+bwd+AdamW) for train_4k,
+``prefill_step`` (forward_with_cache) for prefill_32k, ``serve_step``
+(one-token decode against a seq_len cache) for decode shapes — on
+
+* the single-pod production mesh (16, 16) axes (data, model), and
+* the multi-pod mesh (2, 16, 16) axes (pod, data, model),
+
+prints ``compiled.memory_analysis()`` / ``cost_analysis()``, parses the
+post-SPMD HLO collective schedule, and (single-pod only) runs the unrolled
+calibration lowerings that feed §Roofline (see roofline.py for why).
+
+Results cache as JSON under results/dryrun/; ``--all`` sweeps every runnable
+cell in per-cell subprocesses (isolation: one cell OOM/crash cannot kill the
+sweep, and jit caches do not accumulate).
+
+NOTE: the XLA_FLAGS line above MUST run before any jax import — jax locks
+the device count on first init. Only this entry point forces 512 host
+devices; tests and benches see the real device count.
+"""
+
+import argparse
+import dataclasses
+import json
+import subprocess
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs import ASSIGNED, SHAPES, get_config, shape_applicable
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import (
+    Corrected,
+    correct_with_calibration,
+    cost_metrics,
+    memory_metrics,
+    model_flops,
+    parse_collectives,
+    roofline_terms,
+)
+from repro.train.optimizer import OptConfig
+from repro.train.train_loop import make_prefill_step, make_serve_step, make_train_step
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "results", "dryrun")
+
+
+def input_specs(cfg, shape, kind: str | None = None, mesh=None):
+    """ShapeDtypeStruct stand-ins for every model input of a cell (the
+    assignment's §2 contract: weak-type-correct, shardable, no allocation).
+
+    When ``mesh`` is given, the train microbatch layout matches the clamped
+    grad-accumulation the step factory will use on that mesh.
+    """
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.models.model import build_model
+    from repro.sharding.specs import batch_axes
+    from repro.train.optimizer import opt_init
+    from repro.train.train_loop import _batch_struct
+
+    kind = kind or shape.kind
+    model = build_model(cfg)
+    pshape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    if kind == "train":
+        accum = max(cfg.grad_accum, 1)
+        if mesh is not None:
+            dp = batch_axes(mesh) or ()
+            dp_size = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+            accum = max(1, min(accum, max(shape.global_batch // max(dp_size, 1), 1)))
+            while shape.global_batch % accum or (shape.global_batch // accum) % dp_size:
+                accum -= 1
+                if accum == 1:
+                    break
+        oshape = jax.eval_shape(lambda p: opt_init(OptConfig(), p, cfg.opt_state_dtype), pshape)
+        bstruct = _batch_struct(cfg, (shape.global_batch, shape.seq_len), accum)
+        return {"params": pshape, "opt_state": oshape, "batch": bstruct}
+    if kind == "prefill":
+        bstruct = _batch_struct(cfg, (shape.global_batch, shape.seq_len), 1)
+        bstruct = jax.tree.map(lambda l: jax.ShapeDtypeStruct(l.shape[1:], l.dtype), bstruct)
+        cshape = jax.eval_shape(lambda: model.init_cache(shape.global_batch, shape.seq_len))
+        return {"params": pshape, "batch": bstruct, "cache": cshape}
+    cshape = jax.eval_shape(lambda: model.init_cache(shape.global_batch, shape.seq_len))
+    tok = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+    return {"params": pshape, "tokens": tok, "cache": cshape}
+
+
+def lower_and_compile(cfg, shape, mesh, *, verbose=True):
+    """Lower + compile one cell; returns (compiled, fallbacks, secs).
+
+    Lowering happens under ``with mesh:`` so mesh-contextual sharding
+    constraints (e.g. the MoE EP steering in repro.models.moe) resolve."""
+    t0 = time.time()
+    specs = input_specs(cfg, shape, mesh=mesh)
+    with mesh:
+        return _lower_inner(cfg, shape, mesh, specs, t0, verbose)
+
+
+def _lower_inner(cfg, shape, mesh, specs, t0, verbose):
+    if shape.kind == "train":
+        step_fn, _, _, bstruct, _, fb = make_train_step(
+            cfg, mesh, OptConfig(), shape.global_batch, shape.seq_len
+        )
+        lowered = step_fn.lower(specs["params"], specs["opt_state"], bstruct)
+    elif shape.kind == "prefill":
+        step_fn, _, bstruct, _, cshape, _, fb = make_prefill_step(
+            cfg, mesh, shape.global_batch, shape.seq_len
+        )
+        lowered = step_fn.lower(specs["params"], bstruct, cshape)
+    else:
+        step_fn, _, cshape, _, _, fb = make_serve_step(
+            cfg, mesh, shape.global_batch, shape.seq_len
+        )
+        lowered = step_fn.lower(specs["params"], specs["tokens"], cshape)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    if verbose:
+        print(f"    lowered {t_lower:.1f}s, compiled {t_compile:.1f}s")
+    return compiled, fb, t_lower + t_compile
+
+
+def _calib_cfg(cfg, n_layers: int):
+    """Unrolled small-depth variant for calibration (same dims/shape)."""
+    changes = dict(n_layers=n_layers, unroll_layers=True, grad_accum=1)
+    if cfg.family == "encdec":
+        changes["n_encoder_layers"] = n_layers
+    return dataclasses.replace(cfg, **changes)
+
+
+def _calib_metrics(cfg, shape, mesh) -> dict:
+    compiled, _, secs = lower_and_compile(cfg, shape, mesh, verbose=False)
+    cm = cost_metrics(compiled)
+    coll = parse_collectives(compiled.as_text())
+    return {
+        "flops": cm["flops"],
+        "bytes": cm["bytes"],
+        "coll_ring": sum(c["ring_bytes"] for c in coll.values()),
+        "coll_raw": sum(c["raw_bytes"] for c in coll.values()),
+        "secs": secs,
+    }
+
+
+def calibrate(cfg, shape, mesh) -> tuple[Corrected, dict]:
+    """Unrolled L-sweep -> corrected per-chip totals (see roofline.py)."""
+    period = cfg.hybrid_attn_every if cfg.family == "hybrid" else 1
+    f_p = _calib_metrics(_calib_cfg(cfg, period), shape, mesh)
+    f_2p = _calib_metrics(_calib_cfg(cfg, 2 * period), shape, mesh)
+    group = {k: f_2p[k] - f_p[k] for k in ("flops", "bytes", "coll_ring", "coll_raw")}
+    outside = {k: f_p[k] - group[k] for k in group}
+    layer = None
+    if period > 1 and cfg.n_layers % period:
+        f_p1 = _calib_metrics(_calib_cfg(cfg, period + 1), shape, mesh)
+        layer = {k: f_p1[k] - f_p[k] for k in group}
+    corrected = correct_with_calibration(group, layer, outside, cfg.n_layers, period)
+    detail = {"per_period": group, "outside": outside, "per_layer_rem": layer}
+    return corrected, detail
+
+
+def apply_overrides(cfg, overrides: list[str]):
+    """--set key=value config overrides (perf iterations); nested keys use
+    'ssm.chunk=64' style paths into sub-configs."""
+    for ov in overrides:
+        key, _, raw = ov.partition("=")
+        if "." in key:
+            sub_name, field = key.split(".", 1)
+            sub = getattr(cfg, sub_name)
+            cur = getattr(sub, field)
+            val = type(cur)(raw) if not isinstance(cur, bool) else raw.lower() in ("1", "true")
+            cfg = dataclasses.replace(cfg, **{sub_name: dataclasses.replace(sub, **{field: val})})
+        else:
+            cur = getattr(cfg, key)
+            if isinstance(cur, bool):
+                val = raw.lower() in ("1", "true")
+            elif cur is None:
+                val = raw
+            else:
+                val = type(cur)(raw)
+            cfg = dataclasses.replace(cfg, **{key: val})
+    return cfg
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool, do_calibrate: bool = True,
+             overrides: list[str] | None = None) -> dict:
+    cfg = apply_overrides(get_config(arch), overrides or [])
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+                "status": "skipped", "reason": why}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    print(f"[dryrun] {arch} x {shape_name} mesh={dict(mesh.shape)} ({n_chips} chips)")
+    rec: dict = {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+                 "chips": n_chips, "status": "ok", "overrides": overrides or []}
+    compiled, fallbacks, secs = lower_and_compile(cfg, shape, mesh)
+    rec["compile_s"] = secs
+    rec["sharding_fallbacks"] = fallbacks
+    mem = memory_metrics(compiled)
+    print(f"    memory_analysis: {mem}")
+    rec["memory"] = mem
+    cm = cost_metrics(compiled)
+    rec["cost_raw"] = cm
+    coll = parse_collectives(compiled.as_text())
+    rec["collectives"] = coll
+    print(f"    collectives: { {k: v['count'] for k, v in coll.items()} }")
+    if do_calibrate and not multi_pod:
+        corrected, detail = calibrate(cfg, shape, mesh)
+        rec["corrected"] = dataclasses.asdict(corrected)
+        rec["calibration"] = detail
+        terms = roofline_terms(corrected.flops, corrected.bytes, corrected.coll_ring)
+        rec["roofline"] = terms
+        mf = model_flops(cfg, shape)
+        rec["model_flops_global"] = mf
+        rec["model_flops_per_chip"] = mf / n_chips
+        rec["useful_flops_ratio"] = (mf / n_chips) / corrected.flops if corrected.flops else 0.0
+        print(f"    roofline: compute={terms['compute_s']*1e3:.2f}ms "
+              f"memory={terms['memory_s']*1e3:.2f}ms "
+              f"collective={terms['collective_s']*1e3:.2f}ms "
+              f"dominant={terms['dominant']} frac={terms['roofline_fraction']:.2f} "
+              f"useful={rec['useful_flops_ratio']:.2f}")
+    return rec
+
+
+def cell_path(arch, shape_name, multi_pod, tag=""):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    pod = "pod2" if multi_pod else "pod1"
+    suffix = f"_{tag}" if tag else ""
+    return os.path.join(RESULTS_DIR, f"{arch}__{shape_name}__{pod}{suffix}.json")
+
+
+def runnable_cells():
+    for arch in ASSIGNED:
+        cfg = get_config(arch)
+        for shape_name, shape in SHAPES.items():
+            yield arch, shape_name, shape_applicable(cfg, shape)[0]
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--single-pod", action="store_true")
+    ap.add_argument("--all", action="store_true", help="sweep all cells (subprocess per cell)")
+    ap.add_argument("--no-calibrate", action="store_true")
+    ap.add_argument("--force", action="store_true", help="recompute cached cells")
+    ap.add_argument("--tag", default="", help="results filename tag (perf iterations)")
+    ap.add_argument("--set", action="append", default=[], dest="overrides",
+                    help="config override key=value (repeatable)")
+    args = ap.parse_args()
+
+    if args.all:
+        failures = []
+        for arch, shape_name, ok in runnable_cells():
+            for mp in (False, True):
+                path = cell_path(arch, shape_name, mp, args.tag)
+                if os.path.exists(path) and not args.force:
+                    continue
+                cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                       "--arch", arch, "--shape", shape_name]
+                cmd.append("--multi-pod" if mp else "--single-pod")
+                if args.no_calibrate:
+                    cmd.append("--no-calibrate")
+                if args.tag:
+                    cmd += ["--tag", args.tag]
+                for ov in args.overrides:
+                    cmd += ["--set", ov]
+                print(f"=== {arch} x {shape_name} {'pod2' if mp else 'pod1'} ===", flush=True)
+                r = subprocess.run(cmd, cwd=os.getcwd())
+                if r.returncode != 0:
+                    failures.append((arch, shape_name, mp))
+                    with open(path, "w") as fh:
+                        json.dump({"arch": arch, "shape": shape_name, "multi_pod": mp,
+                                   "status": "error", "returncode": r.returncode}, fh)
+        print(f"sweep done; {len(failures)} failures: {failures}")
+        sys.exit(1 if failures else 0)
+
+    assert args.arch and args.shape, "--arch and --shape required (or --all)"
+    mp = bool(args.multi_pod)
+    try:
+        rec = run_cell(args.arch, args.shape, multi_pod=mp,
+                       do_calibrate=not args.no_calibrate,
+                       overrides=args.overrides)
+    except Exception:
+        traceback.print_exc()
+        rec = {"arch": args.arch, "shape": args.shape, "multi_pod": mp,
+               "status": "error", "traceback": traceback.format_exc()}
+        with open(cell_path(args.arch, args.shape, mp, args.tag), "w") as fh:
+            json.dump(rec, fh, indent=1)
+        sys.exit(1)
+    with open(cell_path(args.arch, args.shape, mp, args.tag), "w") as fh:
+        json.dump(rec, fh, indent=1)
+    print(f"[dryrun] saved {cell_path(args.arch, args.shape, mp, args.tag)}")
+
+
+if __name__ == "__main__":
+    main()

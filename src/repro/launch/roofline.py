@@ -1,0 +1,249 @@
+"""Roofline analysis from compiled dry-run artifacts (no real hardware).
+
+Three terms per (arch, shape) on the single-pod mesh (v5e constants):
+
+    compute    = corrected_HLO_FLOPs_per_chip / 197e12      [bf16 peak]
+    memory     = corrected_HLO_bytes_per_chip / 819e9       [HBM bw]
+    collective = per_chip_ring_bytes / 50e9                 [ICI link bw]
+
+Two methodology notes (both discovered by calibration, see EXPERIMENTS.md):
+
+* XLA ``cost_analysis`` counts a ``while``-loop (lax.scan) body ONCE,
+  ignoring the trip count. Totals are therefore corrected from *unrolled
+  calibration lowerings* at small layer counts: with per-period cost ``g``
+  and outside-stack cost ``o`` measured from two unrolled compiles,
+  ``total = o + (L // p) * g + (L % p) * m`` (p = hybrid period or 1,
+  m = single-layer cost).
+* Collective bytes are not in cost_analysis. We parse the post-SPMD HLO
+  (``compiled.as_text()``), resolve operand shapes through a symbol table,
+  and model per-chip ICI traffic with ring algorithms over the collective's
+  group size g: all-reduce 2*S*(g-1)/g, all-gather/reduce-scatter/all-to-all
+  S*(g-1)/g, collective-permute S. The raw operand-byte sum is also kept.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+
+import numpy as np
+
+# TPU v5e hardware model (per chip)
+PEAK_FLOPS_BF16 = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+# name = <type> opcode(...): lazy type group + mandatory space keeps
+# hyphenated opcodes (all-reduce, all-gather, ...) intact. (v2: the v1
+# greedy character-class regex captured "-reduce" as the opcode and missed
+# ~70% of collectives — see EXPERIMENTS.md §Roofline metric notes.)
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*?)\s([\w\-]+)\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Returns {opcode: {count, ring_bytes, raw_bytes}} per-chip."""
+    # symbol table: name -> output bytes
+    sym: dict[str, int] = {}
+    out: dict[str, dict] = {}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, type_str, opcode = m.groups()
+        nbytes = _shape_bytes(type_str)
+        sym[name] = nbytes
+        base = None
+        for c in COLLECTIVES:
+            if opcode == c or opcode.startswith(c + "-start") or opcode == c + "-start":
+                base = c
+                break
+        if base is None:
+            continue
+        # group size
+        g = 0
+        mg = _GROUPS_RE.search(line)
+        if mg:
+            g = len(mg.group(1).split(","))
+        else:
+            mi = _GROUPS_IOTA_RE.search(line)
+            if mi:
+                g = int(mi.group(2))
+        g = max(g, 2)
+        s_out = nbytes
+        # operand bytes (resolve via symbol table)
+        opnd = 0
+        args = line.split("(", 1)[1].split(")", 1)[0]
+        for tok in args.split(","):
+            tok = tok.strip().lstrip("%")
+            opnd += sym.get(tok, 0)
+        raw = opnd or s_out
+        if base == "all-reduce":
+            ring = 2 * s_out * (g - 1) / g
+        elif base == "all-gather":
+            ring = s_out * (g - 1) / g
+        elif base == "reduce-scatter":
+            ring = raw * (g - 1) / g
+        elif base == "all-to-all":
+            ring = max(raw, s_out) * (g - 1) / g
+        else:  # collective-permute
+            ring = s_out
+        rec = out.setdefault(base, {"count": 0, "ring_bytes": 0.0, "raw_bytes": 0.0})
+        rec["count"] += 1
+        rec["ring_bytes"] += ring
+        rec["raw_bytes"] += float(raw)
+    return out
+
+
+def cost_metrics(compiled) -> dict:
+    ca = compiled.cost_analysis() or {}
+    return {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes": float(ca.get("bytes accessed", 0.0)),
+        "transcendentals": float(ca.get("transcendentals", 0.0)),
+    }
+
+
+def memory_metrics(compiled) -> dict:
+    ma = compiled.memory_analysis()
+    if ma is None:
+        return {}
+    return {
+        "argument_bytes": int(ma.argument_size_in_bytes),
+        "output_bytes": int(ma.output_size_in_bytes),
+        "temp_bytes": int(ma.temp_size_in_bytes),
+        "alias_bytes": int(ma.alias_size_in_bytes),
+        "peak_hbm_bytes": int(
+            ma.argument_size_in_bytes + ma.output_size_in_bytes
+            + ma.temp_size_in_bytes - ma.alias_size_in_bytes
+        ),
+    }
+
+
+@dataclass
+class Corrected:
+    flops: float
+    bytes: float
+    coll_ring: float
+    coll_raw: float
+
+
+def correct_with_calibration(period_metrics: dict, layer_metrics: dict | None,
+                             outside_base: dict, n_layers: int, period: int) -> Corrected:
+    """total = outside + (L // p) * group + (L % p) * layer."""
+    reps, rem = divmod(n_layers, period)
+
+    def total(key):
+        g = period_metrics[key]
+        m = layer_metrics[key] if layer_metrics else 0.0
+        o = outside_base[key]
+        return o + reps * g + rem * m
+
+    return Corrected(
+        flops=total("flops"), bytes=total("bytes"),
+        coll_ring=total("coll_ring"), coll_raw=total("coll_raw"),
+    )
+
+
+def roofline_terms(flops: float, bytes_: float, coll_ring: float) -> dict:
+    t_c = flops / PEAK_FLOPS_BF16
+    t_m = bytes_ / HBM_BW
+    t_x = coll_ring / LINK_BW
+    dom = max((t_c, "compute"), (t_m, "memory"), (t_x, "collective"))[1]
+    bound = max(t_c, t_m, t_x)
+    return {
+        "compute_s": t_c,
+        "memory_s": t_m,
+        "collective_s": t_x,
+        "dominant": dom,
+        "bound_s": bound,
+        "roofline_fraction": (t_c / bound) if bound > 0 else 0.0,
+    }
+
+
+# --------------------------------------------------------- analytic FLOPs
+def count_params(cfg, active_only: bool = False) -> float:
+    """Parameter count (non-embedding by convention for 6ND).
+
+    ``active_only`` gives the *execution-weighted* count used for
+    MODEL_FLOPS: MoE experts at top_k of n_experts; the zamba2 shared block
+    at n_sites executions (stored once, run L/p times)."""
+    d, ff, L = cfg.d_model, cfg.d_ff, cfg.n_layers
+    hd = cfg.resolved_head_dim
+    per_layer = 0.0
+    if cfg.family in ("ssm", "hybrid"):
+        s = cfg.ssm
+        din = s.expand * d
+        h = din // s.headdim
+        per_layer = d * din * 2 + d * s.d_state * 2 + d * h + din * d
+        total = per_layer * L
+        if cfg.family == "hybrid":
+            n_sites = L // cfg.hybrid_attn_every
+            attn = d * cfg.n_heads * hd * 2 + d * cfg.n_kv_heads * hd * 2 + 3 * d * ff
+            total += attn * (n_sites if active_only else 1)
+        return float(total)
+    elif cfg.mla is not None:
+        m = cfg.mla
+        qk = m.nope_head_dim + m.rope_head_dim
+        per_layer = (
+            d * m.q_lora_rank + m.q_lora_rank * cfg.n_heads * qk
+            + d * (m.kv_lora_rank + m.rope_head_dim)
+            + m.kv_lora_rank * cfg.n_heads * (m.nope_head_dim + m.v_head_dim)
+            + cfg.n_heads * m.v_head_dim * d + 3 * d * ff
+        )
+    elif cfg.family == "moe":
+        moe = cfg.moe
+        attn = d * cfg.n_heads * hd * 2 + d * cfg.n_kv_heads * hd * 2
+        e_used = moe.top_k if active_only else moe.n_experts
+        experts = e_used * 3 * d * moe.d_expert
+        shared = moe.n_shared * 3 * d * moe.d_expert
+        dense = 3 * d * moe.dense_ff_parallel
+        router = d * moe.n_experts
+        per_layer = attn + experts + shared + dense + router
+    else:
+        attn = d * cfg.n_heads * hd * 2 + d * cfg.n_kv_heads * hd * 2
+        per_layer = attn + 3 * d * ff
+    total = per_layer * L
+    if cfg.family == "encdec":
+        enc_layer = d * cfg.n_heads * hd * 4 + 3 * d * ff
+        cross = d * cfg.n_heads * hd * 4
+        total += enc_layer * cfg.n_encoder_layers + cross * cfg.n_layers
+    return float(total)
+
+
+def model_flops(cfg, shape) -> float:
+    """Global MODEL_FLOPS for the cell: 6*N_active*D train, 2*N_active*D
+    prefill, 2*N_active*B decode-step."""
+    n_act = count_params(cfg, active_only=True)
+    if shape.kind == "train":
+        return 6.0 * n_act * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n_act * shape.global_batch * shape.seq_len
+    return 2.0 * n_act * shape.global_batch  # one decode token per sequence

@@ -1,0 +1,105 @@
+"""Training CLI: ``python -m repro.launch.train --arch <id> [...]``.
+
+Trains any registry architecture on either the Spatial-Parquet trajectory
+pipeline (``--data-dir`` with .spqf files; the paper-integration path) or the
+structured synthetic stream. Always checkpoint/restart-safe: on boot it
+restores the latest checkpoint if one exists (this is what makes the
+supervisor's kill-and-relaunch loop a complete fault-tolerance story).
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import glob
+import os
+import time
+
+import jax
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="spatial-lm")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--data-dir", default=None, help="dir of .spqf files (trajectory LM)")
+    ap.add_argument("--ckpt-dir", default="checkpoints")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--mesh-data", type=int, default=1)
+    ap.add_argument("--mesh-model", type=int, default=1)
+    ap.add_argument("--reduced", action="store_true", help="use the smoke-test config")
+    ap.add_argument("--heartbeat", default=None)
+    ap.add_argument("--fail-at-step", type=int, default=-1, help="fault injection")
+    ap.add_argument("--no-resume", action="store_true")
+    ap.add_argument("--optimizer", default="adamw", choices=["adamw", "adafactor"])
+    args = ap.parse_args()
+
+    from repro.configs import get_config
+    from repro.data.pipeline import Prefetcher, TrajectoryBatcher, synthetic_token_iter
+    from repro.data.tokenizer import GeoTokenizer
+    from repro.data.synthetic import PORTO_BBOX
+    from repro.launch.mesh import make_host_mesh
+    from repro.train.checkpoint import CheckpointManager
+    from repro.train.optimizer import OptConfig
+    from repro.train.train_loop import run_train_loop
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    mesh = make_host_mesh(args.mesh_data, args.mesh_model)
+    oc = OptConfig(lr=args.lr, warmup_steps=min(100, args.steps // 10 + 1),
+                   total_steps=args.steps, kind=args.optimizer)
+
+    accum = max(cfg.grad_accum, 1)
+    if args.global_batch % accum:
+        accum = 1
+    if args.data_dir:
+        files = sorted(glob.glob(os.path.join(args.data_dir, "*.spqf")))
+        assert files, f"no .spqf files in {args.data_dir}"
+        tok = GeoTokenizer(PORTO_BBOX, order=6)
+        cfg = dataclasses.replace(cfg, vocab=max(cfg.vocab, tok.vocab))
+        data = Prefetcher(TrajectoryBatcher(
+            files, tok, seq_len=args.seq, global_batch=args.global_batch, accum=accum))
+    else:
+        data = Prefetcher(synthetic_token_iter(
+            cfg.vocab, seq_len=args.seq, global_batch=args.global_batch,
+            accum=accum, cfg=cfg))
+    cfg = dataclasses.replace(cfg, grad_accum=accum)
+
+    mgr = CheckpointManager(args.ckpt_dir, compress=True, keep=3)
+
+    # fault injection is once-only (a transient fault, not a deterministic
+    # crash loop): a marker in the ckpt dir disarms it after the first hit
+    fail_at = args.fail_at_step
+    marker = os.path.join(args.ckpt_dir, ".fault_injected")
+    if fail_at >= 0:
+        if os.path.exists(marker):
+            fail_at = -1
+        else:
+            os.makedirs(args.ckpt_dir, exist_ok=True)
+            with open(marker, "w") as fh:
+                fh.write("armed")
+
+    def heartbeat(step):
+        if args.heartbeat:
+            with open(args.heartbeat, "w") as fh:
+                fh.write(str(step))
+
+    t0 = time.time()
+    state, history = run_train_loop(
+        cfg, mesh, oc, iter(data),
+        global_batch=args.global_batch, seq=args.seq, steps=args.steps,
+        checkpoint_mgr=mgr, checkpoint_every=args.ckpt_every,
+        resume=not args.no_resume, heartbeat=heartbeat,
+        fail_at_step=fail_at,
+    )
+    mgr.wait()
+    print(f"[train] done: {args.steps} steps in {time.time()-t0:.1f}s; "
+          f"final loss {history[-1]['loss']:.4f}" if history else "[train] done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,298 @@
+"""Attention blocks: GQA (+qk-norm), MLA (latent attention), cross-attention.
+
+All functions are pure; caches are explicit pytrees. The decode path works
+against a fixed-capacity cache with a position scalar — static shapes only,
+so ``serve_step`` lowers once per (arch, shape) cell.
+
+The ``impl`` knob selects the jnp reference einsum (default; what the
+dry-run lowers) or the Pallas flash kernel (validated in interpret mode).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.flash_attention import attention as flash_attention_op
+
+from .layers import apply_rope, dense_init, rms_norm
+
+NEG_INF = -1e30
+
+
+def _sdpa_blocked(q, k, v, *, causal: bool, block_k: int = 1024):
+    """Online-softmax attention over KV blocks in pure XLA (lax.scan).
+
+    The §Perf "blocked" impl: the (S, Sk) logits matrix is never
+    materialized — peak attention memory is O(S * block_k) instead of
+    O(S * Sk). This is the flash-attention *schedule* expressed as jnp (the
+    Pallas kernel in repro.kernels.flash_attention is its TPU twin; this
+    version lowers everywhere, including the CPU dry-run). Handles
+    asymmetric QK vs V dims (MLA)."""
+    b, s, hq, d = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    group = hq // hkv
+    if sk % block_k:
+        block_k = math.gcd(sk, block_k) or sk
+    nb = sk // block_k
+    scale = 1.0 / np.sqrt(d).astype(np.float32)
+    qg = q.reshape(b, s, hkv, group, d)
+    kb = jnp.moveaxis(k.reshape(b, nb, block_k, hkv, d), 1, 0)
+    vb = jnp.moveaxis(v.reshape(b, nb, block_k, hkv, dv), 1, 0)
+    rows = jnp.arange(s)[:, None] + (sk - s)  # decode-aligned diagonal
+
+    def body(carry, inp):
+        m_prev, l_prev, acc = carry
+        kblk, vblk, bi = inp
+        logits = jnp.einsum("bshgd,bthd->bhgst", qg, kblk,
+                            preferred_element_type=jnp.float32) * scale
+        if causal:
+            cols = bi * block_k + jnp.arange(block_k)[None, :]
+            logits = jnp.where((cols <= rows)[None, None, None], logits, NEG_INF)
+        m_new = jnp.maximum(m_prev, jnp.max(logits, axis=-1))
+        p = jnp.exp(logits - m_new[..., None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhgst,bthd->bhgsd", p.astype(vblk.dtype), vblk,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((b, hkv, group, s), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hkv, group, s), jnp.float32)
+    a0 = jnp.zeros((b, hkv, group, s, dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        jax.checkpoint(body), (m0, l0, a0), (kb, vb, jnp.arange(nb))
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return jnp.moveaxis(out, 3, 1).reshape(b, s, hq, dv).astype(q.dtype)
+
+
+def _sdpa(q, k, v, *, causal: bool, q_pos=None, k_valid_len=None, impl: str = "ref"):
+    """q: (B,S,Hq,D), k/v: (B,Sk,Hkv,D) -> (B,S,Hq,D).
+
+    ``q_pos``: absolute positions of queries (for decode masking);
+    ``k_valid_len``: number of valid cache slots (scalar) — keys beyond are
+    masked out.
+    """
+    b, s, hq, d = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    if impl == "blocked" and k_valid_len is None and q_pos is None:
+        return _sdpa_blocked(q, k, v, causal=causal)
+    if impl == "flash" and k_valid_len is None and q_pos is None:
+        qt = jnp.transpose(q, (0, 2, 1, 3))
+        kt = jnp.transpose(k, (0, 2, 1, 3))
+        vt = jnp.transpose(v, (0, 2, 1, 3))
+        out = flash_attention_op(qt, kt, vt, causal=causal, use_pallas=True)
+        return jnp.transpose(out, (0, 2, 1, 3))
+    group = hq // hkv
+    qg = q.reshape(b, s, hkv, group, d)
+    logits = jnp.einsum("bshgd,bthd->bhgst", qg, k, preferred_element_type=jnp.float32)
+    logits = logits / jnp.sqrt(d).astype(jnp.float32)
+    rows = jnp.arange(s)[:, None] if q_pos is None else q_pos[..., None]
+    cols = jnp.arange(sk)[None, :]
+    mask = None
+    if causal:
+        offset = 0 if q_pos is not None else (sk - s)
+        mask = cols <= rows + offset
+    if k_valid_len is not None:
+        kmask = cols < k_valid_len
+        mask = kmask if mask is None else (mask & kmask)
+    if mask is not None:
+        while mask.ndim < 3:   # -> (B|1, s|1, sk)
+            mask = mask[None]
+        mask = mask[:, None, None]  # (B|1, 1, 1, s|1, sk)
+        logits = jnp.where(mask, logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhgst,bthd->bshgd", p, v)
+    return out.reshape(b, s, hq, v.shape[-1])  # v dim may differ from qk (MLA)
+
+
+# ----------------------------------------------------------------------- GQA
+def init_gqa(rng, cfg, dtype) -> dict:
+    d, hq, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    ks = jax.random.split(rng, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, hq * hd), 0, dtype=dtype),
+        "wk": dense_init(ks[1], (d, hkv * hd), 0, dtype=dtype),
+        "wv": dense_init(ks[2], (d, hkv * hd), 0, dtype=dtype),
+        "wo": dense_init(ks[3], (hq * hd, d), 0, dtype=dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def gqa_forward(cfg, p, x, positions, *, causal=True, cache=None, cache_pos=None,
+                use_rope=True):
+    """Full-sequence or cached attention.
+
+    cache: None, or dict {k: (B, Smax, Hkv, D), v: ...}; when given, the new
+    K/V are written at ``cache_pos`` and attention runs over the cache.
+    Returns (out, new_cache).
+    """
+    b, s, _ = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q = (x @ p["wq"].astype(x.dtype)).reshape(b, s, hq, hd)
+    k = (x @ p["wk"].astype(x.dtype)).reshape(b, s, hkv, hd)
+    v = (x @ p["wv"].astype(x.dtype)).reshape(b, s, hkv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    new_cache = None
+    if cache is not None:
+        kc = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, cache_pos, 0, 0))
+        vc = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, cache_pos, 0, 0))
+        new_cache = {"k": kc, "v": vc}
+        if s == cache["k"].shape[1]:
+            # full-capacity prefill (static condition): attention over the
+            # fresh K/V is equivalent and admits the blocked/flash impls
+            out = _sdpa(q, k, v, causal=True, impl=cfg.attn_impl)
+        else:
+            out = _sdpa(
+                q, kc.astype(x.dtype), vc.astype(x.dtype), causal=True,
+                q_pos=positions if positions.ndim else positions[None],
+                k_valid_len=cache_pos + s, impl="ref",
+            )
+    else:
+        out = _sdpa(q, k, v, causal=causal, impl=cfg.attn_impl)
+    return out.reshape(b, s, hq * hd) @ p["wo"].astype(x.dtype), new_cache
+
+
+def init_gqa_cache(cfg, batch: int, max_len: int, dtype) -> dict:
+    hkv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((batch, max_len, hkv, hd), dtype),
+        "v": jnp.zeros((batch, max_len, hkv, hd), dtype),
+    }
+
+
+# ----------------------------------------------------------------------- MLA
+def init_mla(rng, cfg, dtype) -> dict:
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.n_heads
+    qk_dim = m.nope_head_dim + m.rope_head_dim
+    ks = jax.random.split(rng, 5)
+    return {
+        "wq_a": dense_init(ks[0], (d, m.q_lora_rank), 0, dtype=dtype),
+        "q_norm": jnp.ones((m.q_lora_rank,), dtype),
+        "wq_b": dense_init(ks[1], (m.q_lora_rank, h * qk_dim), 0, dtype=dtype),
+        "wkv_a": dense_init(ks[2], (d, m.kv_lora_rank + m.rope_head_dim), 0, dtype=dtype),
+        "kv_norm": jnp.ones((m.kv_lora_rank,), dtype),
+        "wkv_b": dense_init(
+            ks[3], (m.kv_lora_rank, h * (m.nope_head_dim + m.v_head_dim)), 0, dtype=dtype
+        ),
+        "wo": dense_init(ks[4], (h * m.v_head_dim, d), 0, dtype=dtype),
+    }
+
+
+def _mla_qkv(cfg, p, x, positions):
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    q_lat = rms_norm(x @ p["wq_a"].astype(x.dtype), p["q_norm"], cfg.norm_eps)
+    q = (q_lat @ p["wq_b"].astype(x.dtype)).reshape(b, s, h, m.nope_head_dim + m.rope_head_dim)
+    q_nope, q_rope = jnp.split(q, [m.nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    kv_a = x @ p["wkv_a"].astype(x.dtype)
+    c_kv, k_rope = jnp.split(kv_a, [m.kv_lora_rank], axis=-1)
+    c_kv = rms_norm(c_kv, p["kv_norm"], cfg.norm_eps)          # (B,S,r)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)  # (B,S,1,rd)
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def _mla_attend(cfg, p, q_nope, q_rope, c_kv, k_rope, *, q_pos=None, k_valid_len=None):
+    m = cfg.mla
+    h = cfg.n_heads
+    b, s = q_nope.shape[:2]
+    kv = (c_kv.astype(q_nope.dtype) @ p["wkv_b"].astype(q_nope.dtype)).reshape(
+        b, -1, h, m.nope_head_dim + m.v_head_dim
+    )
+    k_nope, v = jnp.split(kv, [m.nope_head_dim], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope.astype(k_nope.dtype), (*k_nope.shape[:3], m.rope_head_dim))],
+        axis=-1,
+    )
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    # full-sequence path admits the blocked impl (asymmetric dv supported)
+    impl = cfg.attn_impl if (q_pos is None and k_valid_len is None) else "ref"
+    out = _sdpa(q, k, v, causal=True, q_pos=q_pos, k_valid_len=k_valid_len, impl=impl)
+    return out.reshape(b, s, h * m.v_head_dim) @ p["wo"].astype(q_nope.dtype)
+
+
+def mla_forward(cfg, p, x, positions, *, cache=None, cache_pos=None):
+    """MLA attention; cache holds the compressed latent (tiny-KV property):
+    {c_kv: (B, Smax, r), k_rope: (B, Smax, 1, rd)}."""
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(cfg, p, x, positions)
+    if cache is None:
+        out = _mla_attend(cfg, p, q_nope, q_rope, c_kv, k_rope)
+        return out, None
+    cc = jax.lax.dynamic_update_slice(
+        cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), (0, cache_pos, 0)
+    )
+    cr = jax.lax.dynamic_update_slice(
+        cache["k_rope"], k_rope.astype(cache["k_rope"].dtype), (0, cache_pos, 0, 0)
+    )
+    s = x.shape[1]
+    if s == cache["c_kv"].shape[1]:
+        # full-capacity prefill (static condition): attend over the fresh
+        # latents — equivalent, and admits the blocked impl
+        out = _mla_attend(cfg, p, q_nope, q_rope, c_kv, k_rope)
+    else:
+        out = _mla_attend(
+            cfg, p, q_nope, q_rope, cc, cr,
+            q_pos=positions if positions.ndim else positions[None],
+            k_valid_len=cache_pos + s,
+        )
+    return out, {"c_kv": cc, "k_rope": cr}
+
+
+def init_mla_cache(cfg, batch: int, max_len: int, dtype) -> dict:
+    m = cfg.mla
+    return {
+        "c_kv": jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, max_len, 1, m.rope_head_dim), dtype),
+    }
+
+
+# --------------------------------------------------------------- cross-attn
+def init_cross_attention(rng, cfg, dtype) -> dict:
+    d, h, hd = cfg.d_model, cfg.n_heads, cfg.resolved_head_dim
+    ks = jax.random.split(rng, 4)
+    return {
+        "wq": dense_init(ks[0], (d, h * hd), 0, dtype=dtype),
+        "wk": dense_init(ks[1], (d, h * hd), 0, dtype=dtype),
+        "wv": dense_init(ks[2], (d, h * hd), 0, dtype=dtype),
+        "wo": dense_init(ks[3], (h * hd, d), 0, dtype=dtype),
+    }
+
+
+def cross_attention(cfg, p, x, enc_kv=None, enc_out=None):
+    """Decoder->encoder attention. Pass precomputed ``enc_kv`` at decode time
+    (cached) or ``enc_out`` to compute K/V on the fly."""
+    b, s, _ = x.shape
+    h, hd = cfg.n_heads, cfg.resolved_head_dim
+    q = (x @ p["wq"].astype(x.dtype)).reshape(b, s, h, hd)
+    if enc_kv is None:
+        k = (enc_out @ p["wk"].astype(x.dtype)).reshape(b, -1, h, hd)
+        v = (enc_out @ p["wv"].astype(x.dtype)).reshape(b, -1, h, hd)
+    else:
+        k, v = enc_kv["k"].astype(x.dtype), enc_kv["v"].astype(x.dtype)
+    out = _sdpa(q, k, v, causal=False, impl="ref")
+    return out.reshape(b, s, h * hd) @ p["wo"].astype(x.dtype)
+
+
+def make_cross_kv(cfg, p, enc_out):
+    b = enc_out.shape[0]
+    h, hd = cfg.n_heads, cfg.resolved_head_dim
+    k = (enc_out @ p["wk"].astype(enc_out.dtype)).reshape(b, -1, h, hd)
+    v = (enc_out @ p["wv"].astype(enc_out.dtype)).reshape(b, -1, h, hd)
+    return {"k": k, "v": v}

@@ -1,0 +1,114 @@
+"""Shared neural-net layers: norms, RoPE, SwiGLU MLP, initializers.
+
+Pure-functional JAX over plain dict pytrees (no flax — the framework owns its
+parameter tree so checkpointing/sharding rules stay explicit).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dtype_of(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16, "float16": jnp.float16}[name]
+
+
+# ------------------------------------------------------------------- init
+def dense_init(rng, shape, in_axis: int = 0, scale: float = 1.0, dtype=jnp.float32):
+    """Truncated-normal fan-in init (what big LM stacks actually use)."""
+    fan_in = shape[in_axis] if in_axis >= 0 else int(np.prod(shape)) // shape[-1]
+    std = scale / np.sqrt(fan_in)
+    return (jax.random.truncated_normal(rng, -2.0, 2.0, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(rng, shape, dtype=jnp.float32):
+    return (jax.random.normal(rng, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+# ------------------------------------------------------------------- norms
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)).astype(dt)
+
+
+# -------------------------------------------------------------------- RoPE
+def rope_angles(positions: jnp.ndarray, head_dim: int, theta: float) -> tuple:
+    """positions: any shape -> (cos, sin) with trailing dim head_dim//2."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (B, S, H, D); positions: (B, S) or (S,) or scalar."""
+    d = x.shape[-1]
+    cos, sin = rope_angles(positions, d, theta)  # (B, S, half) or (S, half)
+    while cos.ndim < x.ndim - 1:  # broadcast to (B, S, 1, half)
+        cos, sin = cos[None], sin[None]
+    cos, sin = cos[..., None, :], sin[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_embedding(n_pos: int, dim: int) -> jnp.ndarray:
+    """Whisper-style fixed sinusoidal positions (encoder frames)."""
+    pos = np.arange(n_pos)[:, None]
+    i = np.arange(dim // 2)[None, :]
+    ang = pos / np.power(10000.0, 2 * i / dim)
+    emb = np.concatenate([np.sin(ang), np.cos(ang)], axis=1)
+    return jnp.asarray(emb, dtype=jnp.float32)
+
+
+# --------------------------------------------------------------------- MLP
+def init_mlp(rng, d_model: int, d_ff: int, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(rng, 3)
+    return {
+        "w_gate": dense_init(k1, (d_model, d_ff), 0, dtype=dtype),
+        "w_up": dense_init(k2, (d_model, d_ff), 0, dtype=dtype),
+        "w_down": dense_init(k3, (d_ff, d_model), 0, dtype=dtype),
+    }
+
+
+def mlp(params: dict, x: jnp.ndarray) -> jnp.ndarray:
+    """SwiGLU feed-forward."""
+    h = jax.nn.silu(x @ params["w_gate"].astype(x.dtype)) * (x @ params["w_up"].astype(x.dtype))
+    return h @ params["w_down"].astype(x.dtype)
+
+
+def cross_entropy_loss(logits: jnp.ndarray, labels: jnp.ndarray, mask=None,
+                       impl: str = "gather"):
+    """Token-mean cross entropy (fp32 accumulation); labels < 0 are ignored.
+
+    impl="gather" (baseline): fp32 upcast + take_along_axis. On a
+    vocab-sharded mesh the gather forces an all-gather of the logits and the
+    upcast materializes a fp32 (B,S,V) copy — both show up in the dry-run.
+
+    impl="onehot" (§Perf iteration 1): keeps logits in their compute dtype;
+    logsumexp runs as fused reduce (max / exp-sum) and the gold logit is a
+    one-hot contraction, which shards over the vocab axis as a local dot +
+    psum of (B,S) partials — no (B,S,V) fp32 copy, no vocab all-gather.
+    """
+    valid = (labels >= 0) if mask is None else mask & (labels >= 0)
+    safe = jnp.maximum(labels, 0)
+    count = jnp.maximum(valid.sum(), 1)
+    if impl == "gather":
+        logits32 = logits.astype(jnp.float32)
+        logz = jax.scipy.special.logsumexp(logits32, axis=-1)
+        gold = jnp.take_along_axis(logits32, safe[..., None], axis=-1)[..., 0]
+    else:
+        m = jax.lax.stop_gradient(jnp.max(logits, axis=-1))
+        shifted = logits - m[..., None]
+        sumexp = jnp.sum(jnp.exp(shifted.astype(jnp.float32)), axis=-1)
+        logz = jnp.log(sumexp) + m.astype(jnp.float32)
+        onehot = jax.nn.one_hot(safe, logits.shape[-1], dtype=logits.dtype)
+        gold = jnp.einsum("...v,...v->...", logits, onehot,
+                          preferred_element_type=jnp.float32)
+    nll = (logz - gold) * valid
+    return nll.sum() / count, count

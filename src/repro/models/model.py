@@ -1,0 +1,451 @@
+"""Unified model builder: one scan-over-layers stack, six families.
+
+``build_model(cfg)`` returns a :class:`Model` whose members are pure
+functions over dict pytrees:
+
+* ``init(rng)`` — parameters (layer stacks have a leading ``n_layers`` axis
+  so the forward pass is a single ``lax.scan`` — small HLO, fast compiles
+  even at 512 devices).
+* ``forward(params, batch)`` / ``loss(params, batch)`` — training path
+  (activation-rematerialized per layer according to ``cfg.remat``).
+* ``init_cache(batch)`` / ``prefill`` / ``decode_step`` — serving path with
+  fixed-capacity caches (static shapes; ``serve_step`` lowers once).
+
+Families:
+  dense   — pre-norm GQA attention + SwiGLU (granite/qwen3/internlm2)
+  moe     — attention + MoE FFN (arctic: +parallel dense FFN; qwen2-moe:
+            +shared experts)
+  ssm     — pure Mamba2/SSD (mamba2-130m)
+  hybrid  — Mamba2 backbone + ONE weight-shared attention block applied every
+            ``hybrid_attn_every`` layers with per-site KV caches (zamba2)
+  encdec  — whisper: stub audio frames -> encoder; decoder w/ cross-attn
+  vlm     — pixtral: stub ViT patch embeddings + adapter, decoder backbone
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+from . import attention as attn
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from .layers import (
+    cross_entropy_loss,
+    dense_init,
+    dtype_of,
+    embed_init,
+    init_mlp,
+    mlp,
+    rms_norm,
+    sinusoidal_embedding,
+)
+
+
+# ----------------------------------------------------------------- layer init
+def _init_decoder_layer(cfg: ModelConfig, rng, dtype) -> dict:
+    ks = jax.random.split(rng, 4)
+    p: dict = {"ln1": jnp.ones((cfg.d_model,), dtype)}
+    if cfg.family == "ssm" or (cfg.family == "hybrid"):
+        p["ssm"] = ssm_mod.init_ssm(ks[0], cfg, dtype)
+        return p
+    if cfg.mla is not None:
+        p["attn"] = attn.init_mla(ks[0], cfg, dtype)
+    else:
+        p["attn"] = attn.init_gqa(ks[0], cfg, dtype)
+    p["ln2"] = jnp.ones((cfg.d_model,), dtype)
+    if cfg.family == "moe":
+        p["moe"] = moe_mod.init_moe(ks[1], cfg, dtype)
+    else:
+        p["mlp"] = init_mlp(ks[1], cfg.d_model, cfg.d_ff, dtype)
+    if cfg.family == "encdec":  # decoder layer gains cross-attention
+        p["ln_cross"] = jnp.ones((cfg.d_model,), dtype)
+        p["cross"] = attn.init_cross_attention(ks[2], cfg, dtype)
+    return p
+
+
+def _init_encoder_layer(cfg: ModelConfig, rng, dtype) -> dict:
+    ks = jax.random.split(rng, 2)
+    return {
+        "ln1": jnp.ones((cfg.d_model,), dtype),
+        "attn": attn.init_gqa(ks[0], cfg, dtype),
+        "ln2": jnp.ones((cfg.d_model,), dtype),
+        "mlp": init_mlp(ks[1], cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def _init_shared_attn_block(cfg: ModelConfig, rng, dtype) -> dict:
+    """Zamba2's weight-shared attention+MLP block (simplified: hidden-only
+    input; the concat-with-embedding variant is noted in DESIGN.md)."""
+    ks = jax.random.split(rng, 2)
+    return {
+        "ln1": jnp.ones((cfg.d_model,), dtype),
+        "attn": attn.init_gqa(ks[0], cfg, dtype),
+        "ln2": jnp.ones((cfg.d_model,), dtype),
+        "mlp": init_mlp(ks[1], cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def init_params(cfg: ModelConfig, rng) -> dict:
+    pdt = dtype_of(cfg.param_dtype)
+    keys = jax.random.split(rng, 8)
+    params: dict = {
+        "embed": embed_init(keys[0], (cfg.vocab, cfg.d_model), pdt),
+        "final_norm": jnp.ones((cfg.d_model,), pdt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(keys[1], (cfg.d_model, cfg.vocab), 0, dtype=pdt)
+    lkeys = jax.random.split(keys[2], cfg.n_layers)
+    params["layers"] = jax.vmap(lambda k: _init_decoder_layer(cfg, k, pdt))(lkeys)
+    if cfg.family == "hybrid":
+        params["shared_attn"] = _init_shared_attn_block(cfg, keys[3], pdt)
+    if cfg.family == "encdec":
+        ekeys = jax.random.split(keys[4], cfg.n_encoder_layers)
+        params["encoder"] = {
+            "layers": jax.vmap(lambda k: _init_encoder_layer(cfg, k, pdt))(ekeys),
+            "final_norm": jnp.ones((cfg.d_model,), pdt),
+        }
+    if cfg.frontend is not None:
+        fdim = cfg.frontend_dim or cfg.d_model
+        params["frontend_adapter"] = dense_init(keys[5], (fdim, cfg.d_model), 0, dtype=pdt)
+    return params
+
+
+# ------------------------------------------------------------- layer forward
+def _attn_block(cfg, lp, x, positions, cache=None, cache_pos=None):
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    if cfg.mla is not None:
+        out, new_cache = attn.mla_forward(cfg, lp["attn"], h, positions,
+                                          cache=cache, cache_pos=cache_pos)
+    else:
+        out, new_cache = attn.gqa_forward(cfg, lp["attn"], h, positions,
+                                          cache=cache, cache_pos=cache_pos)
+    return x + out, new_cache
+
+
+def _ffn_block(cfg, lp, x):
+    h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    if cfg.family == "moe":
+        out, aux = moe_mod.moe_block(cfg, lp["moe"], h)
+        return x + out, aux
+    return x + mlp(lp["mlp"], h), {}
+
+
+def _shared_block(cfg, sp, x, positions, cache=None, cache_pos=None):
+    h = rms_norm(x, sp["ln1"], cfg.norm_eps)
+    out, new_cache = attn.gqa_forward(cfg, sp["attn"], h, positions,
+                                      cache=cache, cache_pos=cache_pos)
+    x = x + out
+    x = x + mlp(sp["mlp"], rms_norm(x, sp["ln2"], cfg.norm_eps))
+    return x, new_cache
+
+
+def _decoder_layer(cfg, lp, x, positions, *, shared=None, layer_idx=None,
+                   cache=None, cache_pos=None, site_caches=None, enc_out=None,
+                   cross_kv=None):
+    """One decoder layer; returns (x, new_layer_cache, aux, new_site_caches)."""
+    aux: dict = {}
+    if cfg.family in ("ssm", "hybrid"):
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        if cache is not None and x.shape[1] == 1:
+            out, new_cache = ssm_mod.ssm_decode_step(cfg, lp["ssm"], h, cache)
+        else:
+            out, new_cache = ssm_mod.ssm_forward(cfg, lp["ssm"], h, cache=cache)
+        x = x + out
+        if cfg.family == "hybrid" and shared is not None:
+            every = cfg.hybrid_attn_every
+            apply_attn = (layer_idx % every) == (every - 1)
+            site = layer_idx // every
+
+            def with_attn(operand):
+                x_in, sc = operand
+                if sc is None:
+                    y, _ = _shared_block(cfg, shared, x_in, positions)
+                    return y, sc
+                site_cache = jax.tree.map(
+                    lambda a: jax.lax.dynamic_index_in_dim(a, site, 0, keepdims=False), sc
+                )
+                y, new_site = _shared_block(cfg, shared, x_in, positions,
+                                            cache=site_cache, cache_pos=cache_pos)
+                sc = jax.tree.map(
+                    lambda a, n: jax.lax.dynamic_update_index_in_dim(a, n, site, 0),
+                    sc, new_site,
+                )
+                return y, sc
+
+            def without_attn(operand):
+                return operand
+
+            if isinstance(layer_idx, int):  # static (unrolled calibration)
+                if layer_idx % every == every - 1:
+                    x, site_caches = with_attn((x, site_caches))
+            else:
+                x, site_caches = jax.lax.cond(apply_attn, with_attn, without_attn,
+                                              (x, site_caches))
+        return x, new_cache, aux, site_caches
+
+    x, new_cache = _attn_block(cfg, lp, x, positions, cache=cache, cache_pos=cache_pos)
+    if cfg.family == "encdec":
+        h = rms_norm(x, lp["ln_cross"], cfg.norm_eps)
+        x = x + attn.cross_attention(cfg, lp["cross"], h, enc_kv=cross_kv, enc_out=enc_out)
+    x, aux = _ffn_block(cfg, lp, x)
+    return x, new_cache, aux, site_caches
+
+
+def _remat_wrap(cfg, fn):
+    if cfg.remat == "none":
+        return fn
+    policy = None
+    if cfg.remat == "selective":
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    return jax.checkpoint(fn, policy=policy)
+
+
+# --------------------------------------------------------------- embeddings
+def _embed_inputs(cfg, params, batch):
+    """Returns (x (B,S,d) activations, positions (S,), label_mask or None)."""
+    adt = dtype_of(cfg.dtype)
+    tokens = batch["tokens"]
+    x = jnp.take(params["embed"], tokens, axis=0).astype(adt)
+    label_mask = None
+    if cfg.family == "vlm":
+        patches = batch["patches"].astype(adt)
+        vis = patches @ params["frontend_adapter"].astype(adt)
+        x = jnp.concatenate([vis, x], axis=1)
+        label_mask = jnp.concatenate(
+            [jnp.zeros(vis.shape[:2], bool), jnp.ones(tokens.shape, bool)], axis=1
+        )
+    positions = jnp.arange(x.shape[1])
+    return x, positions, label_mask
+
+
+def _encode(cfg, params, batch):
+    """Whisper encoder over stub frame embeddings."""
+    adt = dtype_of(cfg.dtype)
+    frames = batch["frames"].astype(adt)
+    x = frames @ params["frontend_adapter"].astype(adt)
+    x = x + sinusoidal_embedding(x.shape[1], cfg.d_model)[None].astype(adt)
+    positions = jnp.arange(x.shape[1])
+
+    def body(h, lp):
+        h2 = rms_norm(h, lp["ln1"], cfg.norm_eps)
+        out, _ = attn.gqa_forward(cfg, lp["attn"], h2, positions, causal=False)
+        h = h + out
+        h = h + mlp(lp["mlp"], rms_norm(h, lp["ln2"], cfg.norm_eps))
+        return h, None
+
+    body = _remat_wrap(cfg, body)
+    if cfg.unroll_layers:
+        for i in range(cfg.n_encoder_layers):
+            lp = jax.tree.map(lambda a: a[i], params["encoder"]["layers"])
+            x, _ = body(x, lp)
+    else:
+        x, _ = jax.lax.scan(lambda h, lp: body(h, lp), x, params["encoder"]["layers"])
+    return rms_norm(x, params["encoder"]["final_norm"], cfg.norm_eps)
+
+
+# ------------------------------------------------------------------- forward
+def forward(cfg: ModelConfig, params: dict, batch: dict):
+    """Training/prefill-style full forward. Returns (logits, aux_losses)."""
+    x, positions, label_mask = _embed_inputs(cfg, params, batch)
+    enc_out = _encode(cfg, params, batch) if cfg.family == "encdec" else None
+    shared = params.get("shared_attn")
+    n_layers = cfg.n_layers
+    layer_ids = jnp.arange(n_layers)
+
+    def body(carry, scanned):
+        h, aux_sum = carry
+        lp, idx = scanned
+        h, _, aux, _ = _decoder_layer(
+            cfg, lp, h, positions, shared=shared, layer_idx=idx, enc_out=enc_out
+        )
+        for k in aux:
+            aux_sum = dict(aux_sum, **{k: aux_sum.get(k, 0.0) + aux[k]})
+        return (h, aux_sum), None
+
+    body = _remat_wrap(cfg, body)
+    aux0 = (
+        {"moe_aux_loss": jnp.zeros((), jnp.float32), "router_z_loss": jnp.zeros((), jnp.float32)}
+        if cfg.family == "moe"
+        else {}
+    )
+    if cfg.unroll_layers:
+        carry = (x, aux0)
+        for i in range(n_layers):
+            lp = jax.tree.map(lambda a: a[i], params["layers"])
+            h, aux_sum = carry
+            h, _, aux_i, _ = _decoder_layer(
+                cfg, lp, h, positions, shared=shared, layer_idx=i, enc_out=enc_out
+            )
+            for k in aux_i:
+                aux_sum = dict(aux_sum, **{k: aux_sum.get(k, 0.0) + aux_i[k]})
+            carry = (h, aux_sum)
+        x, aux = carry
+    else:
+        (x, aux), _ = jax.lax.scan(body, (x, aux0), (params["layers"], layer_ids))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head.astype(x.dtype)
+    return logits, aux, label_mask
+
+
+def loss_fn(cfg: ModelConfig, params: dict, batch: dict):
+    """Next-token cross entropy (+ MoE aux). Returns (loss, metrics)."""
+    logits, aux, label_mask = forward(cfg, params, batch)
+    labels = batch.get("labels")
+    if labels is None:
+        tokens = batch["tokens"]
+        labels = jnp.concatenate(
+            [tokens[:, 1:], jnp.full_like(tokens[:, :1], -1)], axis=1
+        )
+        if label_mask is not None:  # vlm: prepend ignore labels for patches
+            pad = jnp.full((tokens.shape[0], logits.shape[1] - labels.shape[1]), -1, labels.dtype)
+            labels = jnp.concatenate([pad, labels], axis=1)
+    ce, count = cross_entropy_loss(logits, labels, impl=cfg.ce_impl)
+    total = ce
+    metrics = {"ce_loss": ce, "tokens": count}
+    for k, v in aux.items():
+        total = total + v
+        metrics[k] = v
+    metrics["loss"] = total
+    return total, metrics
+
+
+# ------------------------------------------------------------------- serving
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    adt = dtype_of(cfg.dtype)
+    cache: dict = {"pos": jnp.zeros((), jnp.int32)}
+    if cfg.family in ("ssm", "hybrid"):
+        cache["layers"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (cfg.n_layers, *a.shape)).copy()
+            if False else jnp.zeros((cfg.n_layers, *a.shape), a.dtype),
+            ssm_mod.init_ssm_cache(cfg, batch, adt),
+        )
+        if cfg.family == "hybrid":
+            n_sites = cfg.n_layers // cfg.hybrid_attn_every
+            site = attn.init_gqa_cache(cfg, batch, max_len, adt)
+            cache["sites"] = jax.tree.map(
+                lambda a: jnp.zeros((n_sites, *a.shape), a.dtype), site
+            )
+        return cache
+    if cfg.mla is not None:
+        layer = attn.init_mla_cache(cfg, batch, max_len, adt)
+    else:
+        layer = attn.init_gqa_cache(cfg, batch, max_len, adt)
+    cache["layers"] = jax.tree.map(
+        lambda a: jnp.zeros((cfg.n_layers, *a.shape), a.dtype), layer
+    )
+    if cfg.family == "encdec":
+        enc_len = max_len // cfg.frontend_downsample
+        hd = cfg.resolved_head_dim
+        cache["cross"] = {
+            "k": jnp.zeros((cfg.n_layers, batch, enc_len, cfg.n_heads, hd), adt),
+            "v": jnp.zeros((cfg.n_layers, batch, enc_len, cfg.n_heads, hd), adt),
+        }
+    return cache
+
+
+def forward_with_cache(cfg: ModelConfig, params: dict, batch: dict, cache: dict):
+    """Prefill (S>=1) or decode (S==1) against the cache at ``cache['pos']``.
+
+    Returns (logits, new_cache)."""
+    adt = dtype_of(cfg.dtype)
+    tokens = batch["tokens"]
+    pos0 = cache["pos"]
+    b, s = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(adt)
+    if cfg.family == "vlm" and "patches" in batch:
+        vis = batch["patches"].astype(adt) @ params["frontend_adapter"].astype(adt)
+        x = jnp.concatenate([vis, x], axis=1)
+        s = x.shape[1]
+    positions = pos0 + jnp.arange(s)
+    shared = params.get("shared_attn")
+    new_cache = dict(cache)
+
+    cross_kv = None
+    if cfg.family == "encdec":
+        if "frames" in batch:  # prefill: encode + cache cross K/V per layer
+            enc_out = _encode(cfg, params, batch)
+
+            def mk(lp):
+                kv = attn.make_cross_kv(cfg, lp["cross"], enc_out)
+                return kv
+
+            new_cache["cross"] = jax.vmap(mk)(params["layers"])
+        cross_kv = new_cache["cross"]
+
+    layer_ids = jnp.arange(cfg.n_layers)
+    site_caches = new_cache.get("sites")
+
+    def body(carry, scanned):
+        h, sites = carry
+        lp, lcache, idx, ckv = scanned
+        h, lcache_new, _, sites = _decoder_layer(
+            cfg, lp, h, positions, shared=shared, layer_idx=idx,
+            cache=lcache, cache_pos=pos0, site_caches=sites, cross_kv=ckv,
+        )
+        return (h, sites), lcache_new
+
+    scanned = (params["layers"], cache["layers"], layer_ids,
+               cross_kv if cross_kv is not None else layer_ids)
+    if cfg.unroll_layers:
+        # Python layer indices keep the hybrid shared-attn schedule static, so
+        # calibration lowerings count exactly the executed ops per layer.
+        lcaches = []
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[i], params["layers"])
+            lcache = jax.tree.map(lambda a: a[i], cache["layers"])
+            ckv = (jax.tree.map(lambda a: a[i], cross_kv)
+                   if cfg.family == "encdec" else None)
+            x, lc, _, site_caches = _decoder_layer(
+                cfg, lp, x, positions, shared=shared, layer_idx=i,
+                cache=lcache, cache_pos=pos0, site_caches=site_caches,
+                cross_kv=ckv,
+            )
+            lcaches.append(lc)
+        layer_caches = jax.tree.map(lambda *ls: jnp.stack(ls), *lcaches)
+    else:
+        (x, site_caches), layer_caches = jax.lax.scan(body, (x, site_caches), scanned)
+    new_cache["layers"] = layer_caches
+    if site_caches is not None:
+        new_cache["sites"] = site_caches
+    new_cache["pos"] = pos0 + s
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head.astype(x.dtype)
+    return logits, new_cache
+
+
+def decode_step(cfg, params, tokens, cache):
+    """One-token decode: tokens (B, 1) -> (logits (B,1,V), cache)."""
+    return forward_with_cache(cfg, params, {"tokens": tokens}, cache)
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable[[Any], dict]
+    forward: Callable[[dict, dict], Any]
+    loss: Callable[[dict, dict], Any]
+    init_cache: Callable[[int, int], dict]
+    forward_with_cache: Callable[[dict, dict, dict], Any]
+    decode_step: Callable[[dict, Any, dict], Any]
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    import functools
+
+    return Model(
+        cfg=cfg,
+        init=functools.partial(init_params, cfg),
+        forward=functools.partial(forward, cfg),
+        loss=functools.partial(loss_fn, cfg),
+        init_cache=functools.partial(init_cache, cfg),
+        forward_with_cache=functools.partial(forward_with_cache, cfg),
+        decode_step=functools.partial(decode_step, cfg),
+    )

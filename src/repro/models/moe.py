@@ -1,0 +1,196 @@
+"""Mixture-of-Experts feed-forward with expert parallelism (EP).
+
+Sort-based capacity dispatch (static shapes, SPMD-shardable):
+
+1. router logits -> top-k experts + renormalized gates per token;
+2. flat (token, expert) assignments sorted by expert; each assignment gets a
+   rank within its expert, assignments past ``capacity`` drop (standard
+   capacity-factor semantics);
+3. tokens scatter into per-expert buffers ``(E, C, d)``; experts run as a
+   batched einsum (E is the EP-sharded dim — on a real mesh the scatter and
+   gather around it become the MoE all-to-alls);
+4. outputs gather-combine back weighted by gates.
+
+Supports qwen2-moe (shared experts + routed top-4, experts padded to an
+EP-divisible count with -inf router logits) and arctic (parallel dense FFN
+residual + 128 routed top-2).
+
+Aux losses: switch-style load-balance loss and router z-loss.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import dense_init, init_mlp, mlp
+
+
+def _padded_experts(moe) -> int:
+    return max(moe.pad_experts_to, moe.n_experts)
+
+
+def _constrain(x, axes):
+    """Best-effort with_sharding_constraint by standard axis names (data /
+    model / pod); silently skipped when no mesh context provides them (host
+    meshes in tests). Step factories enter ``with mesh:`` so this resolves
+    on the production meshes."""
+    from jax.sharding import PartitionSpec as P
+
+    names: set = set()
+    try:
+        am = jax.sharding.get_abstract_mesh()
+        names |= set(getattr(am, "axis_names", ()) or ())
+    except Exception:
+        pass
+    try:
+        from jax._src import mesh as _mesh_lib
+
+        pm = _mesh_lib.thread_resources.env.physical_mesh
+        names |= set(getattr(pm, "axis_names", ()) or ())
+    except Exception:
+        pass
+    spec = P(*[a if (a in names) else None for a in axes])
+    if all(s is None for s in spec):
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except Exception:
+        return x
+
+
+def init_moe(rng, cfg, dtype) -> dict:
+    moe = cfg.moe
+    d, f = cfg.d_model, moe.d_expert
+    e = _padded_experts(moe)
+    ks = jax.random.split(rng, 6)
+    p = {
+        "router": dense_init(ks[0], (d, e), 0, dtype=jnp.float32),  # fp32 router
+        "w_gate": dense_init(ks[1], (e, d, f), 1, dtype=dtype),
+        "w_up": dense_init(ks[2], (e, d, f), 1, dtype=dtype),
+        "w_down": dense_init(ks[3], (e, f, d), 1, dtype=dtype),
+    }
+    if moe.n_shared:
+        p["shared"] = init_mlp(ks[4], d, moe.n_shared * f, dtype)
+    if moe.dense_ff_parallel:
+        p["dense"] = init_mlp(ks[5], d, moe.dense_ff_parallel, dtype)
+    return p
+
+
+def _router(cfg, p, xf):
+    """xf: (..., d) -> (probs, gates, expert_idx, logits) with padding masked."""
+    moe = cfg.moe
+    e_pad = _padded_experts(moe)
+    logits = (xf.astype(jnp.float32) @ p["router"]).astype(jnp.float32)
+    if e_pad > moe.n_experts:
+        pad_mask = jnp.arange(e_pad) >= moe.n_experts
+        logits = jnp.where(pad_mask, -1e30, logits)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, moe.top_k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+    return probs, gate_vals, expert_idx, logits
+
+
+def _aux_losses(cfg, probs, expert_idx, logits):
+    moe = cfg.moe
+    e_pad = probs.shape[-1]
+    n_assign = int(np.prod(expert_idx.shape))
+    me = probs.reshape(-1, e_pad).mean(axis=0)
+    ce = jnp.zeros(e_pad).at[expert_idx.reshape(-1)].add(1.0) / n_assign
+    aux_loss = moe.n_experts * jnp.sum(me * ce) * moe.aux_loss_weight
+    z_loss = moe.router_z_weight * jnp.mean(
+        jax.scipy.special.logsumexp(logits, axis=-1) ** 2
+    )
+    return {"moe_aux_loss": aux_loss, "router_z_loss": z_loss}
+
+
+def _rank_within_expert(sorted_e: jnp.ndarray) -> jnp.ndarray:
+    """Rank of each sorted assignment within its expert run (batched, no
+    searchsorted): rank = pos - cummax(segment-start positions)."""
+    nk = sorted_e.shape[-1]
+    pos = jnp.arange(nk)
+    start = jnp.concatenate(
+        [jnp.ones((*sorted_e.shape[:-1], 1), bool),
+         sorted_e[..., 1:] != sorted_e[..., :-1]], axis=-1,
+    )
+    seg_start = jnp.where(start, pos, 0)
+    running = jax.lax.cummax(seg_start, axis=sorted_e.ndim - 1)
+    return pos - running
+
+
+def moe_block(cfg, p, x: jnp.ndarray) -> tuple[jnp.ndarray, dict]:
+    """x: (B, S, d) -> (out, aux).
+
+    Two dispatch strategies (§Perf iteration 3):
+
+    * ``moe_grouped=False`` (baseline): one global sort-dispatch over all
+      B*S tokens. Correct, but under SPMD the scatter into the E-sharded
+      buffer makes XLA all-gather the whole (E, C, d) buffer per chip.
+    * ``moe_grouped=True``: gshard-style groups = batch rows. Dispatch and
+      combine are *group-local* (batch is data-sharded, so no cross-chip
+      traffic); only the (G, E, Cg, d) buffer crosses the mesh as a single
+      data<->model all-to-all around the EP einsum — the minimal routing
+      traffic of top_k * tokens * d * capacity_factor bytes.
+    """
+    moe = cfg.moe
+    b, s, d = x.shape
+    e_pad = _padded_experts(moe)
+    e_real = moe.n_experts
+    k = moe.top_k
+
+    if cfg.moe_grouped:
+        g, n = b, s
+    else:
+        g, n = 1, b * s
+    capacity = max(int(moe.capacity_factor * n * k / e_real), k)
+
+    xg = x.reshape(g, n, d)
+    probs, gate_vals, expert_idx, logits = _router(cfg, p, xg)   # (g,n,·)
+    aux = _aux_losses(cfg, probs, expert_idx, logits)
+
+    flat_e = expert_idx.reshape(g, n * k)
+    flat_gates = gate_vals.reshape(g, n * k)
+    order = jnp.argsort(flat_e, axis=1)                          # stable
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=1)
+    rank = _rank_within_expert(sorted_e)
+    keep = rank < capacity
+    buf_slot = jnp.where(keep, sorted_e * capacity + rank, e_pad * capacity)
+    token_of = order // k                                        # (g, n*k)
+
+    gidx = jnp.arange(g)[:, None]
+    buf = jnp.zeros((g, e_pad * capacity + 1, d), x.dtype)
+    vals = jnp.take_along_axis(xg, token_of[..., None], axis=1)
+    buf = buf.at[gidx, buf_slot].set(vals * keep[..., None].astype(x.dtype))
+    expert_in = buf[:, :-1].reshape(g, e_pad, capacity, d)
+    if cfg.moe_grouped:
+        # steer SPMD to the EP all-to-all: groups ride the batch (data) axis
+        # into the dispatch, experts ride the model axis through the einsum
+        expert_in = _constrain(expert_in, ("data", "model", None, None))
+
+    # ---- expert computation (E is the EP axis; g is the DP axis)
+    h = jax.nn.silu(
+        jnp.einsum("gecd,edf->gecf", expert_in, p["w_gate"].astype(x.dtype))
+    ) * jnp.einsum("gecd,edf->gecf", expert_in, p["w_up"].astype(x.dtype))
+    expert_out = jnp.einsum("gecf,efd->gecd", h, p["w_down"].astype(x.dtype))
+
+    # ---- combine (group-local gather + scatter-add)
+    if cfg.moe_grouped:
+        # bring outputs home (all-to-all back to group shards) so the
+        # scatter-add combine is chip-local instead of a psum over 'model'
+        expert_out = _constrain(expert_out, ("data", None, None, None))
+    out_flat = expert_out.reshape(g, e_pad * capacity, d)
+    contrib = jnp.take_along_axis(
+        out_flat, jnp.minimum(buf_slot, e_pad * capacity - 1)[..., None], axis=1
+    )
+    sorted_gates = jnp.take_along_axis(flat_gates, order, axis=1)
+    contrib = contrib * (sorted_gates * keep)[..., None].astype(x.dtype)
+    y = jnp.zeros((g, n, d), x.dtype).at[gidx, token_of].add(contrib)
+    y = y.reshape(b * s, d)
+
+    xf = x.reshape(b * s, d)
+    if moe.n_shared:
+        y = y + mlp(p["shared"], xf)
+    if moe.dense_ff_parallel:
+        y = y + mlp(p["dense"], xf)
+    return y.reshape(b, s, d), aux

@@ -1,0 +1,210 @@
+"""Mamba2 (SSD — state-space duality) block, arXiv:2405.21060.
+
+Chunked SSD forward: within chunks of Q tokens the recurrence is evaluated as
+a masked quadratic form (the "duality" — attention-like einsums on the MXU);
+across chunks a ``lax.scan`` carries the (H, N, P) state. Decode is the plain
+O(1) recurrence against a persistent state + convolution ring buffers.
+
+Projections are kept as separate matrices (wz/wx/wB/wC/wdt) rather than one
+packed in_proj so tensor-parallel sharding falls on clean dimensions
+(DESIGN.md §7). All state math runs in float32.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import dense_init, rms_norm
+
+
+def ssm_dims(cfg) -> tuple[int, int, int, int]:
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.headdim
+    return d_inner, n_heads, s.d_state, s.conv_width
+
+
+def init_ssm(rng, cfg, dtype) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_inner, h, n, w = ssm_dims(cfg)
+    ks = jax.random.split(rng, 9)
+    dt = np.exp(
+        np.random.RandomState(0).uniform(np.log(1e-3), np.log(1e-1), h)
+    )  # target softplus(dt_bias) in [1e-3, 1e-1]
+    dt_bias = dt + np.log(-np.expm1(-dt))
+    return {
+        "wz": dense_init(ks[0], (d, d_inner), 0, dtype=dtype),
+        "wx": dense_init(ks[1], (d, d_inner), 0, dtype=dtype),
+        "wB": dense_init(ks[2], (d, n), 0, dtype=dtype),
+        "wC": dense_init(ks[3], (d, n), 0, dtype=dtype),
+        "wdt": dense_init(ks[4], (d, h), 0, dtype=dtype),
+        "dt_bias": jnp.asarray(dt_bias, jnp.float32),
+        "A_log": jnp.log(jnp.asarray(np.random.RandomState(1).uniform(1, 16, h), jnp.float32)),
+        "D": jnp.ones((h,), jnp.float32),
+        "conv_x": dense_init(ks[6], (w, d_inner), 0, dtype=dtype),
+        "conv_B": dense_init(ks[7], (w, n), 0, dtype=dtype),
+        "conv_C": dense_init(ks[8], (w, n), 0, dtype=dtype),
+        "norm": jnp.ones((d_inner,), dtype),
+        "out_proj": dense_init(ks[5], (d_inner, d), 0, dtype=dtype),
+    }
+
+
+def _causal_depthwise_conv(x: jnp.ndarray, kernel: jnp.ndarray, tail=None):
+    """x: (B, L, C), kernel: (w, C). ``tail``: (B, w-1, C) carry-in (decode /
+    prefill continuation); defaults to zeros."""
+    w = kernel.shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], w - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([tail.astype(x.dtype), x], axis=1)
+    y = sum(
+        xp[:, i : i + x.shape[1]] * kernel[i].astype(x.dtype) for i in range(w)
+    )
+    return y
+
+
+def ssd_scan(xh, dt, a_neg, b_mat, c_mat, chunk: int, init_state=None,
+             matmul_dtype=jnp.float32):
+    """Chunked SSD. xh: (B,L,H,P) f32; dt: (B,L,H) f32; a_neg: (H,) negative;
+    b_mat/c_mat: (B,L,N) f32. Returns (y (B,L,H,P), final_state (B,H,N,P)).
+
+    ``matmul_dtype`` selects the intra-chunk einsum precision (§Perf: the
+    official Mamba2 kernels run these matmuls in bf16 with fp32 state math;
+    the decay/cumsum/state path here always stays fp32)."""
+    bsz, L, h, p = xh.shape
+    n = b_mat.shape[-1]
+    assert L % chunk == 0, (L, chunk)
+    nc = L // chunk
+    xc = xh.reshape(bsz, nc, chunk, h, p)
+    dtc = dt.reshape(bsz, nc, chunk, h)
+    bc = b_mat.reshape(bsz, nc, chunk, n)
+    cc = c_mat.reshape(bsz, nc, chunk, n)
+    da = dtc * a_neg  # (B,nc,Q,H), negative
+    cs = jnp.cumsum(da, axis=2)
+    # intra-chunk quadratic form. NOTE: mask BEFORE exp — the upper triangle
+    # has diff = cs_i - cs_j > 0 growing with chunk size; exp would overflow
+    # to inf there and inf*0 NaNs the backward (hit at chunk>=64 with
+    # init-scale dt*A ~ 1.6/step).
+    diff = cs[:, :, :, None, :] - cs[:, :, None, :, :]       # (B,nc,i,j,H)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    lmat = jnp.exp(jnp.where(tri[None, None, :, :, None], diff, -1e30))
+    scores = jnp.einsum("bcin,bcjn->bcij", cc.astype(matmul_dtype),
+                        bc.astype(matmul_dtype),
+                        preferred_element_type=jnp.float32)  # shared across H
+    m = (scores[..., None] * lmat * dtc[:, :, None, :, :]).astype(matmul_dtype)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", m, xc.astype(matmul_dtype),
+                         preferred_element_type=jnp.float32)
+    # per-chunk end states
+    decay_to_end = jnp.exp(cs[:, :, -1:, :] - cs)            # (B,nc,Q,H)
+    s_chunk = jnp.einsum("bcjh,bcjn,bcjhp->bchnp", decay_to_end * dtc, bc, xc)
+    chunk_decay = jnp.exp(cs[:, :, -1, :])                   # (B,nc,H)
+    # inter-chunk state scan
+    s0 = (
+        jnp.zeros((bsz, h, n, p), jnp.float32)
+        if init_state is None
+        else init_state.astype(jnp.float32)
+    )
+
+    def step(s_prev, inp):
+        s_c, dec_c = inp
+        s_new = s_prev * dec_c[:, :, None, None] + s_c
+        return s_new, s_prev
+
+    s_final, s_prevs = jax.lax.scan(
+        step, s0, (jnp.moveaxis(s_chunk, 1, 0), jnp.moveaxis(chunk_decay, 1, 0))
+    )
+    s_prevs = jnp.moveaxis(s_prevs, 0, 1)                    # (B,nc,H,N,P)
+    y_inter = jnp.einsum("bcin,bchnp->bcihp", cc, s_prevs) * jnp.exp(cs)[..., None]
+    y = (y_intra + y_inter).reshape(bsz, L, h, p)
+    return y, s_final
+
+
+def ssm_forward(cfg, p, x, *, cache=None):
+    """Full-sequence Mamba2 block. If ``cache`` is given (prefill), the final
+    state and conv tails are written into it. Returns (out, new_cache)."""
+    s = cfg.ssm
+    d_inner, h, n, w = ssm_dims(cfg)
+    bsz, L, _ = x.shape
+    z = x @ p["wz"].astype(x.dtype)
+    xs = x @ p["wx"].astype(x.dtype)
+    bm = x @ p["wB"].astype(x.dtype)
+    cm = x @ p["wC"].astype(x.dtype)
+    dt_raw = x @ p["wdt"].astype(x.dtype)
+    tails = (cache or {})
+    xs_c = jax.nn.silu(_causal_depthwise_conv(xs, p["conv_x"], tails.get("conv_x")))
+    bm_c = jax.nn.silu(_causal_depthwise_conv(bm, p["conv_B"], tails.get("conv_B")))
+    cm_c = jax.nn.silu(_causal_depthwise_conv(cm, p["conv_C"], tails.get("conv_C")))
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    a_neg = -jnp.exp(p["A_log"])
+    from .layers import dtype_of as _dt
+
+    xh = xs_c.astype(jnp.float32).reshape(bsz, L, h, s.headdim)
+    y, s_final = ssd_scan(
+        xh, dt, a_neg, bm_c.astype(jnp.float32), cm_c.astype(jnp.float32),
+        chunk=min(s.chunk, L),
+        init_state=tails.get("state"),
+        matmul_dtype=_dt(getattr(cfg, "ssd_matmul_dtype", "float32")),
+    )
+    y = y + p["D"][None, None, :, None] * xh
+    y = y.reshape(bsz, L, d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = y @ p["out_proj"].astype(x.dtype)
+    new_cache = None
+    if cache is not None:
+        new_cache = {
+            "state": s_final,
+            "conv_x": xs[:, -(w - 1):].astype(cache["conv_x"].dtype),
+            "conv_B": bm[:, -(w - 1):].astype(cache["conv_B"].dtype),
+            "conv_C": cm[:, -(w - 1):].astype(cache["conv_C"].dtype),
+        }
+    return out, new_cache
+
+
+def ssm_decode_step(cfg, p, x, cache):
+    """One-token decode. x: (B, 1, d); cache holds state + conv ring buffers.
+    Returns (out (B,1,d), new_cache)."""
+    s = cfg.ssm
+    d_inner, h, n, w = ssm_dims(cfg)
+    bsz = x.shape[0]
+    xt = x[:, 0]
+    z = xt @ p["wz"].astype(x.dtype)
+    xs = xt @ p["wx"].astype(x.dtype)
+    bm = xt @ p["wB"].astype(x.dtype)
+    cm = xt @ p["wC"].astype(x.dtype)
+    dt_raw = xt @ p["wdt"].astype(x.dtype)
+
+    def conv_step(buf, new, kernel):
+        full = jnp.concatenate([buf.astype(new.dtype), new[:, None]], axis=1)  # (B, w, C)
+        out = jnp.einsum("bwc,wc->bc", full, kernel.astype(new.dtype))
+        return jax.nn.silu(out), full[:, 1:]
+
+    xs_c, nbx = conv_step(cache["conv_x"], xs, p["conv_x"])
+    bm_c, nbb = conv_step(cache["conv_B"], bm, p["conv_B"])
+    cm_c, nbc = conv_step(cache["conv_C"], cm, p["conv_C"])
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    a_neg = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dt * a_neg)                                      # (B,H)
+    xh = xs_c.astype(jnp.float32).reshape(bsz, h, s.headdim)
+    state = cache["state"].astype(jnp.float32)                       # (B,H,N,P)
+    state = state * decay[:, :, None, None] + jnp.einsum(
+        "bh,bn,bhp->bhnp", dt, bm_c.astype(jnp.float32), xh
+    )
+    y = jnp.einsum("bn,bhnp->bhp", cm_c.astype(jnp.float32), state)
+    y = y + p["D"][None, :, None] * xh
+    y = y.reshape(bsz, d_inner).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = (y @ p["out_proj"].astype(x.dtype))[:, None]
+    return out, {"state": state, "conv_x": nbx, "conv_B": nbb, "conv_C": nbc}
+
+
+def init_ssm_cache(cfg, batch: int, dtype) -> dict:
+    s = cfg.ssm
+    d_inner, h, n, w = ssm_dims(cfg)
+    return {
+        "state": jnp.zeros((batch, h, n, s.headdim), jnp.float32),
+        "conv_x": jnp.zeros((batch, w - 1, d_inner), dtype),
+        "conv_B": jnp.zeros((batch, w - 1, n), dtype),
+        "conv_C": jnp.zeros((batch, w - 1, n), dtype),
+    }

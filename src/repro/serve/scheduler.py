@@ -1,0 +1,136 @@
+"""Batched serving: continuous-batching-lite request scheduler.
+
+Requests (prompts) queue up; the scheduler packs up to ``max_batch`` slots,
+prefills new requests into their slots, then decodes all active slots
+together one token/step. A slot frees when its request emits EOS or hits
+``max_new_tokens``, and is refilled from the queue on the next cycle —
+continuous batching with a fixed-capacity cache (static shapes: one compiled
+prefill + one compiled decode).
+
+For the assignment's decode shapes, ``make_serve_step`` in
+repro.train.train_loop is the distributed version of the same step; this
+scheduler is the host-side orchestration used by examples/serve_lm.py.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import build_model
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray           # (len,) int32
+    max_new_tokens: int = 32
+    out_tokens: list = field(default_factory=list)
+    done: bool = False
+    t_submit: float = 0.0
+    t_first: float = 0.0
+    t_done: float = 0.0
+
+
+class BatchedServer:
+    def __init__(self, cfg, params, *, max_batch: int = 4, max_len: int = 256,
+                 eos_id: int = 2, greedy: bool = True):
+        self.cfg = cfg
+        self.params = params
+        self.model = build_model(cfg)
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.eos_id = eos_id
+
+        # per-slot caches (batch dim = max_batch); positions per slot
+        self.cache = self.model.init_cache(max_batch, max_len)
+        self.slot_req: list[Request | None] = [None] * max_batch
+        self.queue: list[Request] = []
+        self._decode = jax.jit(self.model.decode_step, donate_argnums=(2,))
+
+    # ------------------------------------------------------------------- API
+    def submit(self, prompt, max_new_tokens=32, rid=None) -> Request:
+        req = Request(rid=rid if rid is not None else len(self.queue),
+                      prompt=np.asarray(prompt, np.int32),
+                      max_new_tokens=max_new_tokens, t_submit=time.time())
+        self.queue.append(req)
+        return req
+
+    def run(self, max_steps: int = 10_000) -> list[Request]:
+        """Run until queue + slots drain. Returns completed requests."""
+        completed: list[Request] = []
+        steps = 0
+        while (self.queue or any(self.slot_req)) and steps < max_steps:
+            self._fill_slots()
+            self._decode_once()
+            steps += 1
+            for i, req in enumerate(self.slot_req):
+                if req is not None and req.done:
+                    completed.append(req)
+                    self.slot_req[i] = None
+        return completed
+
+    # -------------------------------------------------------------- internals
+    def _fill_slots(self):
+        """Admit a wave of queued requests when the batch is idle.
+
+        Wave batching: all slots share the cache position scalar, so a new
+        wave is admitted only when every slot is free (true continuous
+        batching needs per-slot positions — noted as a framework extension;
+        the distributed serve_step itself is position-vector-ready since
+        apply_rope accepts (B, S) positions)."""
+        if any(r is not None for r in self.slot_req):
+            return
+        free = [i for i, r in enumerate(self.slot_req) if r is None]
+        if not free or not self.queue:
+            return
+        admitted = []
+        for i in free:
+            if not self.queue:
+                break
+            req = self.queue.pop(0)
+            self.slot_req[i] = req
+            admitted.append((i, req))
+        if not admitted:
+            return
+        # prefill each admitted slot: run a forward_with_cache over the
+        # prompt for the whole batch but mask writes to other slots by
+        # zero-length... static shapes require a uniform prefill, so we
+        # prefill per admission wave with right-padded prompts and reset pos.
+        maxp = max(len(r.prompt) for _, r in admitted)
+        toks = np.zeros((self.max_batch, maxp), np.int32)
+        for i, req in admitted:
+            toks[i, : len(req.prompt)] = req.prompt
+        cache = jax.tree.map(lambda a: a, self.cache)
+        cache["pos"] = jnp.zeros((), jnp.int32)
+        logits, cache = self.model.forward_with_cache(
+            self.params, {"tokens": jnp.asarray(toks)}, cache
+        )
+        self.cache = cache
+        last = np.asarray(jnp.argmax(logits[:, -1], axis=-1)).astype(np.int32)
+        now = time.time()
+        for i, req in admitted:
+            req.out_tokens = [int(last[i])]
+            req.t_first = now
+
+    def _decode_once(self):
+        active = [(i, r) for i, r in enumerate(self.slot_req) if r is not None]
+        if not active:
+            return
+        cur = np.zeros((self.max_batch, 1), np.int32)
+        for i, req in active:
+            cur[i, 0] = req.out_tokens[-1] if req.out_tokens else self.eos_id
+        logits, self.cache = self._decode(self.params, jnp.asarray(cur), self.cache)
+        nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1)).astype(np.int32)
+        pos = int(self.cache["pos"])
+        for i, req in active:
+            tok = int(nxt[i])
+            req.out_tokens.append(tok)
+            if tok == self.eos_id or len(req.out_tokens) >= req.max_new_tokens \
+               or pos >= self.max_len - 1:
+                req.done = True
+                req.t_done = time.time()

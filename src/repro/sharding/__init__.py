@@ -1,0 +1,17 @@
+from .specs import (
+    batch_axes,
+    batch_spec,
+    cache_specs,
+    fsdp_axes,
+    param_specs,
+    to_named_sharding,
+)
+
+__all__ = [
+    "param_specs",
+    "cache_specs",
+    "batch_spec",
+    "batch_axes",
+    "fsdp_axes",
+    "to_named_sharding",
+]

@@ -1,0 +1,208 @@
+"""PartitionSpec rules: DP/FSDP over 'data' (+'pod'), TP over 'model', EP for
+MoE experts, SP (sequence sharding) for long-context decode caches.
+
+Rules are path-keyed over the parameter pytree and specify specs for the
+*trailing* dims of each leaf; leading dims (the scan-stacked ``n_layers`` /
+``n_sites`` axes) are padded with None. Any dim whose size does not divide
+its mesh axis falls back to replication (logged by the dry-run, not silent —
+see ``explain()``).
+"""
+
+from __future__ import annotations
+
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+
+def mesh_axis_sizes(mesh: Mesh) -> dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def fsdp_axes(cfg: ModelConfig, mesh: Mesh):
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    if not cfg.fsdp_pod:
+        axes = tuple(a for a in axes if a != "pod")
+    return axes if axes else None
+
+
+def batch_axes(mesh: Mesh):
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return axes if axes else None
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    sizes = mesh_axis_sizes(mesh)
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        n = 1
+        for a in axis:
+            n *= sizes[a]
+        return n
+    return sizes[axis]
+
+
+class SpecBuilder:
+    def __init__(self, cfg: ModelConfig, mesh: Mesh):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.fsdp = fsdp_axes(cfg, mesh)
+        self.tp = "model" if "model" in mesh.axis_names else None
+        self.fallbacks: list[str] = []
+
+    def dim(self, size: int, axis, what: str = ""):
+        """Use ``axis`` for a dim only if the size divides the axis product."""
+        if axis is None:
+            return None
+        if size % _axis_size(self.mesh, axis) != 0:
+            self.fallbacks.append(f"{what}: dim {size} !% axis {axis} -> replicated")
+            return None
+        return axis
+
+    def spec(self, shape: tuple[int, ...], *axes, what: str = "") -> P:
+        assert len(axes) == len(shape), (shape, axes)
+        return P(*[self.dim(s, a, what) for s, a in zip(shape, axes)])
+
+
+def _leaf_spec(b: SpecBuilder, path: str, shape: tuple[int, ...]) -> P:
+    """Spec for the trailing dims of a parameter leaf (path '/'-joined)."""
+    cfg = b.cfg
+    name = path.split("/")[-1]
+    fsdp, tp = b.fsdp, b.tp
+
+    def pad(spec_dims: list, ndim: int) -> P:
+        lead = [None] * (ndim - len(spec_dims))
+        return P(*lead, *spec_dims)
+
+    nd = len(shape)
+    tail = shape[-2:] if nd >= 2 else shape
+
+    # ---- scalars / vectors: replicated
+    if name in ("ln1", "ln2", "ln_cross", "final_norm", "norm", "q_norm",
+                "k_norm", "kv_norm", "dt_bias", "A_log", "D"):
+        return P(*[None] * nd)
+    # ---- embeddings / head
+    if name == "embed":
+        return pad([b.dim(shape[-2], tp, name), b.dim(shape[-1], fsdp, name)], nd)
+    if name == "lm_head":
+        return pad([b.dim(shape[-2], fsdp, name), b.dim(shape[-1], tp, name)], nd)
+    if name == "frontend_adapter":
+        return pad([None, b.dim(shape[-1], tp, name)], nd)
+    # ---- MoE expert stacks (trailing dims: E, in, out); shared/dense expert
+    #      MLPs (paths .../moe/shared/*, .../moe/dense/*) use plain MLP rules.
+    if "moe" in path and "shared" not in path and "dense" not in path:
+        if name == "router":
+            return pad([b.dim(shape[-2], fsdp, name), None], nd)
+        if name in ("w_gate", "w_up") and nd >= 3:
+            return pad([b.dim(shape[-3], tp, "EP"), b.dim(shape[-2], fsdp, name), None], nd)
+        if name == "w_down" and nd >= 3:
+            return pad([b.dim(shape[-3], tp, "EP"), None, b.dim(shape[-1], fsdp, name)], nd)
+    # ---- MLA
+    if name in ("wq_a", "wkv_a"):
+        return pad([b.dim(shape[-2], fsdp, name), None], nd)
+    if name in ("wq_b", "wkv_b"):
+        return pad([None, b.dim(shape[-1], tp, name)], nd)
+    # ---- SSM
+    if name in ("wz", "wx"):
+        return pad([b.dim(shape[-2], fsdp, name), b.dim(shape[-1], tp, name)], nd)
+    if name in ("wB", "wC", "wdt"):
+        return pad([b.dim(shape[-2], fsdp, name), None], nd)
+    if name == "conv_x":
+        return pad([None, b.dim(shape[-1], tp, name)], nd)
+    if name in ("conv_B", "conv_C"):
+        return P(*[None] * nd)
+    if name == "out_proj":
+        return pad([b.dim(shape[-2], tp, name), b.dim(shape[-1], fsdp, name)], nd)
+    # ---- attention / MLP matrices
+    if name in ("wq", "wk", "wv", "w_gate", "w_up"):
+        return pad([b.dim(shape[-2], fsdp, name), b.dim(shape[-1], tp, name)], nd)
+    if name in ("wo", "w_down"):
+        return pad([b.dim(shape[-2], tp, name), b.dim(shape[-1], fsdp, name)], nd)
+    return P(*[None] * nd)
+
+
+def param_specs(cfg: ModelConfig, mesh: Mesh, params_shape) -> tuple:
+    """(pytree of PartitionSpec matching params, list of fallback notes).
+
+    ``params_shape`` is a pytree of ShapeDtypeStruct or arrays.
+    """
+    import jax
+
+    b = SpecBuilder(cfg, mesh)
+
+    def visit(path, leaf):
+        keys = [getattr(k, "key", getattr(k, "idx", None)) for k in path]
+        return _leaf_spec(b, "/".join(str(k) for k in keys), leaf.shape)
+
+    specs = jax.tree_util.tree_map_with_path(visit, params_shape)
+    return specs, b.fallbacks
+
+
+def batch_spec(cfg: ModelConfig, mesh: Mesh, *, microbatched: bool) -> P:
+    """Sharding for (.., B, S)-shaped token arrays (leading accum dim unsharded)."""
+    dp = batch_axes(mesh)
+    return P(None, dp) if microbatched else P(dp)
+
+
+def cache_specs(cfg: ModelConfig, mesh: Mesh, cache_shape) -> tuple:
+    """Shardings for the serving cache pytree.
+
+    Layer K/V caches (L, B, S, H, D): batch over dp; heads over tp; if
+    ``cfg.seq_shard_cache`` and the batch cannot shard (B=1 long-context),
+    the sequence dim shards over 'data' instead (SP decode).
+    """
+    import jax
+
+    b = SpecBuilder(cfg, mesh)
+    dp = batch_axes(mesh)
+    data_only = "data" if "data" in mesh.axis_names else None
+
+    def visit(path, leaf):
+        keys = "/".join(str(getattr(k, "key", getattr(k, "idx", ""))) for k in path)
+        shape = leaf.shape
+        nd = len(shape)
+        if keys.endswith("pos"):
+            return P()
+        batch_dim_ok = shape[1] % _axis_size(b.mesh, dp) == 0 if nd >= 2 and dp else False
+        if "cross" in keys or keys.endswith("k") or keys.endswith("v"):
+            # (L, B, S, H, hd) attention caches (layer or site stacked)
+            if nd == 5:
+                heads_ax = b.dim(shape[3], b.tp, keys)
+                if batch_dim_ok:
+                    if heads_ax is None:
+                        # heads !% tp (MQA/GQA few-head caches): SP over the
+                        # model axis on the sequence dim instead — the
+                        # attention contraction psums across 'model'
+                        return P(None, dp, b.dim(shape[2], b.tp, keys), None, None)
+                    return P(None, dp, None, heads_ax, None)
+                if cfg.seq_shard_cache:
+                    return P(None, None, b.dim(shape[2], data_only, keys),
+                             heads_ax, None)
+                return P(None, None, None, heads_ax, None)
+        if keys.endswith("c_kv"):       # (L, B, S, r) MLA latent: SP on seq
+            return P(None, dp if batch_dim_ok else None,
+                     b.dim(shape[2], b.tp, keys), None)
+        if keys.endswith("k_rope"):     # (L, B, S, 1, rd)
+            return P(None, dp if batch_dim_ok else None,
+                     b.dim(shape[2], b.tp, keys), None, None)
+        if keys.endswith("state"):      # (L, B, H, N, P) ssm state
+            return P(None, dp if batch_dim_ok else None,
+                     b.dim(shape[2], b.tp, keys), None, None)
+        if "conv" in keys:              # (L, B, w-1, C)
+            return P(None, dp if batch_dim_ok else None, None,
+                     b.dim(shape[3], b.tp, keys))
+        return P(*[None] * nd)
+
+    specs = jax.tree_util.tree_map_with_path(visit, cache_shape)
+    return specs, b.fallbacks
+
+
+def to_named_sharding(mesh: Mesh, spec_tree):
+    import jax
+
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

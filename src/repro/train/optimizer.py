@@ -1,0 +1,155 @@
+"""Optimizers: AdamW (dtype-configurable moments) and factored Adafactor.
+
+No optax in-container; implemented directly over dict pytrees. All math in
+float32 regardless of storage dtype; moments stored in ``cfg.opt_state_dtype``
+(bf16 moments halve optimizer HBM — how arctic-480b fits 16 GB/chip).
+Weight decay skips rank<2 leaves (norm scales, biases), standard practice.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dtype_of
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    kind: str = "adamw"  # adamw | adafactor
+
+
+def lr_schedule(oc: OptConfig, step: jnp.ndarray) -> jnp.ndarray:
+    """Linear warmup then cosine decay to min_lr_ratio."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(oc.warmup_steps, 1), 1.0)
+    prog = jnp.clip(
+        (step - oc.warmup_steps) / jnp.maximum(oc.total_steps - oc.warmup_steps, 1),
+        0.0, 1.0,
+    )
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return oc.lr * warm * (oc.min_lr_ratio + (1 - oc.min_lr_ratio) * cos)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), norm
+
+
+# ------------------------------------------------------------------- AdamW
+def adamw_init(params, state_dtype: str = "float32") -> dict:
+    sdt = dtype_of(state_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, sdt)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(oc: OptConfig, params, grads, opt_state):
+    step = opt_state["step"] + 1
+    lr = lr_schedule(oc, step)
+    grads, gnorm = clip_by_global_norm(grads, oc.grad_clip)
+    t = step.astype(jnp.float32)
+    bc1 = 1 - oc.b1**t
+    bc2 = 1 - oc.b2**t
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        mf = m.astype(jnp.float32) * oc.b1 + gf * (1 - oc.b1)
+        vf = v.astype(jnp.float32) * oc.b2 + gf * gf * (1 - oc.b2)
+        update = (mf / bc1) / (jnp.sqrt(vf / bc2) + oc.eps)
+        if p.ndim >= 2:
+            update = update + oc.weight_decay * p.astype(jnp.float32)
+        newp = p.astype(jnp.float32) - lr * update
+        return newp.astype(p.dtype), mf.astype(m.dtype), vf.astype(v.dtype)
+
+    out = jax.tree.map(upd, params, grads, opt_state["m"], opt_state["v"])
+    new_params = jax.tree.map(lambda t3: t3[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t3: t3[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda t3: t3[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_state = {"m": new_m, "v": new_v, "step": step}
+    return new_params, new_state, {"lr": lr, "grad_norm": gnorm}
+
+
+# --------------------------------------------------------------- Adafactor
+def adafactor_init(params, state_dtype: str = "float32") -> dict:
+    sdt = dtype_of(state_dtype)
+
+    def zeros_for(p):
+        if p.ndim >= 2:
+            return {
+                "vr": jnp.zeros(p.shape[:-1], sdt),
+                "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], sdt),
+            }
+        return {"v": jnp.zeros(p.shape, sdt)}
+
+    return {
+        "f": jax.tree.map(zeros_for, params, is_leaf=lambda x: hasattr(x, "shape")),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adafactor_update(oc: OptConfig, params, grads, opt_state):
+    step = opt_state["step"] + 1
+    lr = lr_schedule(oc, step)
+    grads, gnorm = clip_by_global_norm(grads, oc.grad_clip)
+    beta2 = 1.0 - (step.astype(jnp.float32) + 1.0) ** -0.8
+
+    def upd(p, g, f):
+        gf = g.astype(jnp.float32)
+        g2 = gf * gf + 1e-30
+        if p.ndim >= 2:
+            vr = f["vr"].astype(jnp.float32) * beta2 + g2.mean(-1) * (1 - beta2)
+            vc = f["vc"].astype(jnp.float32) * beta2 + g2.mean(-2) * (1 - beta2)
+            denom = (vr[..., None] / jnp.maximum(vr.mean(-1, keepdims=True)[..., None], 1e-30)) * vc[..., None, :]
+            update = gf / jnp.sqrt(jnp.maximum(denom, 1e-30))
+            newf = {"vr": vr.astype(f["vr"].dtype), "vc": vc.astype(f["vc"].dtype)}
+        else:
+            v = f["v"].astype(jnp.float32) * beta2 + g2 * (1 - beta2)
+            update = gf / jnp.sqrt(jnp.maximum(v, 1e-30))
+            newf = {"v": v.astype(f["v"].dtype)}
+        # relative-scale clipping (Adafactor's d=1)
+        rms = jnp.sqrt(jnp.mean(update * update) + 1e-30)
+        update = update / jnp.maximum(1.0, rms)
+        if p.ndim >= 2:
+            update = update + oc.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * update).astype(p.dtype), newf
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_f = tdef.flatten_up_to(opt_state["f"])
+    outs = [upd(p, g, f) for p, g, f in zip(flat_p, flat_g, flat_f)]
+    new_params = jax.tree.unflatten(tdef, [o[0] for o in outs])
+    new_f = jax.tree.unflatten(tdef, [o[1] for o in outs])
+    return new_params, {"f": new_f, "step": step}, {"lr": lr, "grad_norm": gnorm}
+
+
+def opt_init(oc: OptConfig, params, state_dtype="float32"):
+    if oc.kind == "adamw":
+        return adamw_init(params, state_dtype)
+    return adafactor_init(params, state_dtype)
+
+
+def opt_update(oc: OptConfig, params, grads, opt_state):
+    if oc.kind == "adamw":
+        return adamw_update(oc, params, grads, opt_state)
+    return adafactor_update(oc, params, grads, opt_state)

@@ -1,0 +1,313 @@
+"""Distributed train/serve step factories (pjit) + the host training loop.
+
+``make_train_step`` builds a jitted ``(params, opt_state, batch) -> (params,
+opt_state, metrics)`` with:
+
+* donated params/opt_state (in-place HBM update),
+* microbatch gradient accumulation via ``lax.scan`` (batch arrives shaped
+  ``(accum, micro_batch, seq)``),
+* explicit in/out shardings from :mod:`repro.sharding.specs`,
+* loss/grad in float32, params updated via the configured optimizer.
+
+``make_serve_step`` builds the decode step against sharded caches; the cache
+is donated (decode updates in place).
+"""
+
+from __future__ import annotations
+
+import functools
+import time
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.model import build_model
+from repro.sharding.specs import batch_axes, batch_spec, cache_specs, param_specs, to_named_sharding
+
+from .optimizer import OptConfig, opt_init, opt_update
+
+
+def _batch_struct(cfg: ModelConfig, shape_bs: tuple[int, int], accum: int):
+    """ShapeDtypeStructs for one training batch (microbatched layout)."""
+    b, s = shape_bs
+    assert b % accum == 0, (b, accum)
+    mb = b // accum
+    batch = {"tokens": jax.ShapeDtypeStruct((accum, mb, s), jnp.int32)}
+    if cfg.family == "encdec":
+        batch["frames"] = jax.ShapeDtypeStruct(
+            (accum, mb, s // cfg.frontend_downsample, cfg.frontend_dim or cfg.d_model),
+            jnp.float32,
+        )
+    if cfg.family == "vlm":
+        batch["tokens"] = jax.ShapeDtypeStruct((accum, mb, s - cfg.vision_tokens), jnp.int32)
+        batch["patches"] = jax.ShapeDtypeStruct(
+            (accum, mb, cfg.vision_tokens, cfg.frontend_dim), jnp.float32
+        )
+    return batch
+
+
+def batch_shardings(cfg: ModelConfig, mesh: Mesh, batch_struct):
+    dp = batch_axes(mesh)
+
+    def spec_for(leaf):
+        return NamedSharding(mesh, P(None, dp, *([None] * (len(leaf.shape) - 2))))
+
+    return jax.tree.map(spec_for, batch_struct)
+
+
+def make_train_step(cfg: ModelConfig, mesh: Mesh, oc: OptConfig, global_batch: int, seq: int):
+    """Returns (train_step, params_shardings, opt_shardings, batch_struct)."""
+    model = build_model(cfg)
+    # clamp accumulation so each microbatch still tiles the DP axes
+    dp = batch_axes(mesh) or ()
+    dp_size = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+    accum = max(1, min(cfg.grad_accum, max(global_batch // max(dp_size, 1), 1)))
+    while global_batch % accum or (global_batch // accum) % dp_size:
+        accum -= 1
+        if accum == 1:
+            break
+
+    def init_all(rng):
+        params = model.init(rng)
+        return params, opt_init(oc, params, cfg.opt_state_dtype)
+
+    rng0 = jax.random.PRNGKey(0)
+    pshape = jax.eval_shape(model.init, rng0)
+    pspecs, fallbacks = param_specs(cfg, mesh, pshape)
+    pshard = to_named_sharding(mesh, pspecs)
+    # optimizer states mirror parameter shardings leaf-for-leaf
+    def build_opt_shardings():
+        if oc.kind == "adamw":
+            return {
+                "m": pshard,
+                "v": pshard,
+                "step": NamedSharding(mesh, P()),
+            }
+        # adafactor: factored dims follow the param spec minus the reduced dim
+        def fspec(pspec_leaf, pleaf):
+            spec = pspec_leaf
+            if pleaf.ndim >= 2:
+                return {
+                    "vr": NamedSharding(mesh, P(*spec.spec[:-1])),
+                    "vc": NamedSharding(mesh, P(*spec.spec[:-2], spec.spec[-1])),
+                }
+            return {"v": NamedSharding(mesh, P(*spec.spec))}
+
+        return {
+            "f": jax.tree.map(fspec, pshard, pshape,
+                              is_leaf=lambda x: isinstance(x, NamedSharding)),
+            "step": NamedSharding(mesh, P()),
+        }
+
+    oshard = build_opt_shardings()
+    bstruct = _batch_struct(cfg, (global_batch, seq), accum)
+    bshard = batch_shardings(cfg, mesh, bstruct)
+
+    def micro_loss(params, micro):
+        loss, metrics = model.loss(params, micro)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(micro_loss, has_aux=True)
+
+    def train_step(params, opt_state, batch):
+        def one(accum_carry, micro):
+            gsum, msum = accum_carry
+            (loss, metrics), grads = grad_fn(params, micro)
+            gsum = jax.tree.map(lambda a, g: a + g.astype(jnp.float32), gsum, grads)
+            msum = {
+                "loss": msum["loss"] + metrics["loss"],
+                "ce_loss": msum["ce_loss"] + metrics["ce_loss"],
+            }
+            return (gsum, msum), None
+
+        gzero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        mzero = {"loss": jnp.zeros((), jnp.float32), "ce_loss": jnp.zeros((), jnp.float32)}
+        (gsum, msum), _ = jax.lax.scan(one, (gzero, mzero), batch)
+        grads = jax.tree.map(lambda g: g / accum, gsum)
+        new_params, new_opt, opt_metrics = opt_update(oc, params, grads, opt_state)
+        metrics = {
+            "loss": msum["loss"] / accum,
+            "ce_loss": msum["ce_loss"] / accum,
+            **opt_metrics,
+        }
+        return new_params, new_opt, metrics
+
+    scalar = NamedSharding(mesh, P())
+    metric_shard = {"loss": scalar, "ce_loss": scalar, "lr": scalar, "grad_norm": scalar}
+    step_fn = jax.jit(
+        train_step,
+        in_shardings=(pshard, oshard, bshard),
+        out_shardings=(pshard, oshard, metric_shard),
+        donate_argnums=(0, 1),
+    )
+    return step_fn, pshard, oshard, bstruct, bshard, fallbacks
+
+
+def make_forward_step(cfg: ModelConfig, mesh: Mesh, global_batch: int, seq: int):
+    """Inference prefill step (forward only, no backward/optimizer) — what the
+    ``prefill_*`` dry-run shapes lower."""
+    model = build_model(cfg)
+    rng0 = jax.random.PRNGKey(0)
+    pshape = jax.eval_shape(model.init, rng0)
+    pspecs, fallbacks = param_specs(cfg, mesh, pshape)
+    pshard = to_named_sharding(mesh, pspecs)
+    bstruct = _batch_struct(cfg, (global_batch, seq), 1)
+    bstruct = jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct(l.shape[1:], l.dtype), bstruct
+    )  # drop accum dim
+    dp = batch_axes(mesh)
+    bshard = jax.tree.map(
+        lambda l: NamedSharding(mesh, P(dp, *([None] * (len(l.shape) - 1)))), bstruct
+    )
+
+    def fwd(params, batch):
+        logits, aux, _ = model.forward(params, batch)
+        # return only reductions (serving returns sampled tokens; here we keep
+        # the lowered compute honest without materializing (B,S,V) outputs)
+        return jnp.argmax(logits, axis=-1)
+
+    out_shard = NamedSharding(mesh, P(dp, None))
+    step_fn = jax.jit(fwd, in_shardings=(pshard, bshard), out_shardings=out_shard)
+    return step_fn, pshard, bstruct, bshard, fallbacks
+
+
+def make_prefill_step(cfg: ModelConfig, mesh: Mesh, global_batch: int, seq: int):
+    """Inference prefill: forward_with_cache filling a seq-length cache and
+    returning the next-token argmax — what the ``prefill_32k`` cells lower."""
+    model = build_model(cfg)
+    rng0 = jax.random.PRNGKey(0)
+    pshape = jax.eval_shape(model.init, rng0)
+    pspecs, fb1 = param_specs(cfg, mesh, pshape)
+    pshard = to_named_sharding(mesh, pspecs)
+    bstruct = _batch_struct(cfg, (global_batch, seq), 1)
+    bstruct = jax.tree.map(lambda l: jax.ShapeDtypeStruct(l.shape[1:], l.dtype), bstruct)
+    dp = batch_axes(mesh)
+    bshard = jax.tree.map(
+        lambda l: NamedSharding(mesh, P(dp, *([None] * (len(l.shape) - 1)))), bstruct
+    )
+    cshape = jax.eval_shape(lambda: model.init_cache(global_batch, seq))
+    cspecs, fb2 = cache_specs(cfg, mesh, cshape)
+    cshard = to_named_sharding(mesh, cspecs)
+
+    def prefill(params, batch, cache):
+        logits, new_cache = model.forward_with_cache(params, batch, cache)
+        next_tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        return next_tok, new_cache
+
+    tok_shard = NamedSharding(mesh, P(dp, None))
+    step_fn = jax.jit(
+        prefill,
+        in_shardings=(pshard, bshard, cshard),
+        out_shardings=(tok_shard, cshard),
+        donate_argnums=(2,),
+    )
+    return step_fn, pshard, bstruct, bshard, cshape, cshard, fb1 + fb2
+
+
+def make_serve_step(cfg: ModelConfig, mesh: Mesh, batch: int, max_len: int):
+    """One-token decode step with donated sharded cache."""
+    model = build_model(cfg)
+    rng0 = jax.random.PRNGKey(0)
+    pshape = jax.eval_shape(model.init, rng0)
+    pspecs, _ = param_specs(cfg, mesh, pshape)
+    pshard = to_named_sharding(mesh, pspecs)
+    cshape = jax.eval_shape(lambda: model.init_cache(batch, max_len))
+    cspecs, fallbacks = cache_specs(cfg, mesh, cshape)
+    cshard = to_named_sharding(mesh, cspecs)
+    dp = batch_axes(mesh)
+    tok_ok = batch % int(np.prod([mesh.shape[a] for a in (dp or ())])) == 0 if dp else False
+    tok_shard = NamedSharding(mesh, P(dp if tok_ok else None, None))
+
+    def serve_step(params, tokens, cache):
+        logits, new_cache = model.decode_step(params, tokens, cache)
+        next_tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        return next_tok, new_cache
+
+    step_fn = jax.jit(
+        serve_step,
+        in_shardings=(pshard, tok_shard, cshard),
+        out_shardings=(tok_shard, cshard),
+        donate_argnums=(2,),
+    )
+    return step_fn, pshard, cshape, cshard, tok_shard, fallbacks
+
+
+# ------------------------------------------------------------------ host loop
+@dataclass
+class TrainState:
+    params: object
+    opt_state: object
+    step: int = 0
+
+
+def run_train_loop(
+    cfg: ModelConfig,
+    mesh: Mesh,
+    oc: OptConfig,
+    data_iter,
+    *,
+    global_batch: int,
+    seq: int,
+    steps: int,
+    checkpoint_mgr=None,
+    checkpoint_every: int = 0,
+    log_every: int = 10,
+    resume: bool = True,
+    rng_seed: int = 0,
+    heartbeat=None,
+    fail_at_step: int = -1,
+):
+    """The production host loop: init-or-resume, step, log, checkpoint.
+
+    ``fail_at_step`` injects a crash (fault-tolerance tests/drills).
+    """
+    from repro.train import checkpoint as ckpt_mod
+
+    step_fn, pshard, oshard, bstruct, bshard, fallbacks = make_train_step(
+        cfg, mesh, oc, global_batch, seq
+    )
+    model = build_model(cfg)
+    start_step = 0
+    params = opt_state = None
+    if checkpoint_mgr is not None and resume:
+        restored = checkpoint_mgr.restore_latest(mesh, pshard, oshard)
+        if restored is not None:
+            start_step, params, opt_state = restored
+            print(f"[train] resumed from step {start_step}")
+    if params is None:
+        with mesh:
+            init_fn = jax.jit(
+                lambda rng: model.init(rng), out_shardings=pshard
+            )
+            params = init_fn(jax.random.PRNGKey(rng_seed))
+            opt_state = jax.jit(
+                lambda p: opt_init(oc, p, cfg.opt_state_dtype), out_shardings=oshard
+            )(params)
+
+    history = []
+    t0 = time.time()
+    for step in range(start_step, steps):
+        if step == fail_at_step:
+            raise RuntimeError(f"injected failure at step {step}")
+        batch = next(data_iter)
+        batch = jax.tree.map(
+            lambda arr, sh: jax.device_put(arr, sh), batch, bshard
+        )
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        if heartbeat is not None:
+            heartbeat(step)
+        if log_every and (step % log_every == 0 or step == steps - 1):
+            m = {k: float(v) for k, v in metrics.items()}
+            dt = time.time() - t0
+            print(f"[train] step {step} loss={m['loss']:.4f} ce={m['ce_loss']:.4f} "
+                  f"lr={m['lr']:.2e} gnorm={m['grad_norm']:.2f} ({dt:.1f}s)")
+            history.append({"step": step, **m})
+        if checkpoint_mgr is not None and checkpoint_every and (step + 1) % checkpoint_every == 0:
+            checkpoint_mgr.save(step + 1, params, opt_state)
+    if checkpoint_mgr is not None and checkpoint_every:
+        checkpoint_mgr.save(steps, params, opt_state)
+    return TrainState(params, opt_state, steps), history

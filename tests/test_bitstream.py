@@ -1,0 +1,64 @@
+"""Bit-stream pack/unpack invariants."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bitstream import (
+    bytes_to_words,
+    pack_tokens,
+    read_one,
+    unpack_fixed,
+    width_mask,
+    words_to_bytes,
+)
+
+
+@given(st.lists(st.tuples(st.integers(0, 2**64 - 1), st.integers(1, 64)),
+                min_size=0, max_size=200))
+@settings(max_examples=200, deadline=None)
+def test_pack_then_sequential_read(tokens):
+    vals = np.array([t[0] for t in tokens], np.uint64)
+    widths = np.array([t[1] for t in tokens], np.int64)
+    words, total = pack_tokens(vals, widths)
+    assert total == int(widths.sum())
+    off = 0
+    for v, w in tokens:
+        got = read_one(words, off, w)
+        assert got == (v & int(width_mask(w))), (v, w)
+        off += w
+
+
+@given(st.integers(1, 64), st.lists(st.integers(0, 2**64 - 1), min_size=1, max_size=300))
+@settings(max_examples=100, deadline=None)
+def test_fixed_width_vector_roundtrip(width, vals):
+    vals = np.array(vals, np.uint64) & width_mask(width)
+    words, total = pack_tokens(vals, np.full(len(vals), width, np.int64))
+    got = unpack_fixed(words, 0, len(vals), width)
+    assert np.array_equal(got, vals)
+
+
+@given(st.lists(st.tuples(st.integers(0, 2**64 - 1), st.integers(1, 64)),
+                min_size=1, max_size=100))
+@settings(max_examples=100, deadline=None)
+def test_bytes_serialization_roundtrip(tokens):
+    vals = np.array([t[0] for t in tokens], np.uint64)
+    widths = np.array([t[1] for t in tokens], np.int64)
+    words, total = pack_tokens(vals, widths)
+    buf = words_to_bytes(words, total)
+    assert len(buf) == (total + 7) // 8
+    words2 = bytes_to_words(buf)
+    off = 0
+    for v, w in tokens:
+        assert read_one(words2, off, w) == (v & int(width_mask(w)))
+        off += w
+
+
+def test_mixed_stream_alignment():
+    # header(8) + raw(64) + many 7-bit values (the fp-delta layout)
+    vals = [5, 0xDEADBEEFCAFEF00D] + list(range(100))
+    widths = [8, 64] + [7] * 100
+    words, total = pack_tokens(np.array(vals, np.uint64), np.array(widths, np.int64))
+    assert read_one(words, 0, 8) == 5
+    assert read_one(words, 8, 64) == 0xDEADBEEFCAFEF00D
+    got = unpack_fixed(words, 72, 100, 7)
+    assert np.array_equal(got, np.arange(100, dtype=np.uint64))

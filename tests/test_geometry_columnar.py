@@ -1,0 +1,129 @@
+"""Geometry shredding (paper §2): shred∘assemble == id on random geometries."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.columnar import assemble, from_ragged, multipolygon_polygons, shred
+from repro.core.geometry import (
+    TYPE_MULTIPOINT,
+    Geometry,
+    is_cw,
+    polygons_from_rings,
+    signed_area,
+)
+from repro.core.writer import concat_columns, permute_records, record_centroids
+
+
+def _coords(rng, n):
+    return np.round(rng.normal(0, 10, (n, 2)), 6)
+
+
+def _ring(rng, n=5, cw=True):
+    ang = np.sort(rng.uniform(0, 2 * np.pi, n))
+    pts = np.stack([np.cos(ang), np.sin(ang)], 1) * rng.uniform(0.5, 3.0)
+    pts = pts + rng.uniform(-50, 50, 2)
+    ring = np.vstack([pts, pts[:1]])
+    return ring[::-1].copy() if cw == (signed_area(ring) > 0) else ring
+
+
+def random_geometry(rng, allow_collection=True) -> Geometry:
+    kind = rng.integers(0, 8 if allow_collection else 7)
+    if kind == 0:
+        return Geometry.empty()
+    if kind == 1:
+        return Geometry.point(*_coords(rng, 1)[0])
+    if kind == 2:
+        return Geometry.linestring(_coords(rng, rng.integers(2, 8)))
+    if kind == 3:
+        holes = [_ring(rng, 4) * 0.1 for _ in range(rng.integers(0, 3))]
+        return Geometry.polygon(_ring(rng, rng.integers(4, 8)), holes)
+    if kind == 4:
+        return Geometry.multipoint(_coords(rng, rng.integers(1, 6)))
+    if kind == 5:
+        return Geometry.multilinestring(
+            [_coords(rng, rng.integers(2, 6)) for _ in range(rng.integers(1, 4))]
+        )
+    if kind == 6:
+        polys = []
+        for _ in range(rng.integers(1, 4)):
+            holes = [_ring(rng, 4) * 0.1 for _ in range(rng.integers(0, 2))]
+            polys.append((_ring(rng, rng.integers(4, 7)), holes))
+        return Geometry.multipolygon(polys)
+    return Geometry.collection(
+        [random_geometry(rng, allow_collection=True) for _ in range(rng.integers(1, 4))]
+    )
+
+
+@given(st.integers(0, 10_000), st.integers(1, 40))
+@settings(max_examples=60, deadline=None)
+def test_shred_assemble_roundtrip(seed, n):
+    rng = np.random.default_rng(seed)
+    geoms = [random_geometry(rng) for _ in range(n)]
+    cols = shred(geoms)
+    assert cols.n_records == n
+    back = assemble(cols)
+    assert back == geoms
+
+
+def test_multipolygon_winding_reconstruction(rng):
+    polys = [(_ring(rng, 6), [_ring(rng, 4) * 0.2, _ring(rng, 4) * 0.1]),
+             (_ring(rng, 5), []),
+             (_ring(rng, 4), [_ring(rng, 4) * 0.3])]
+    g = Geometry.multipolygon(polys)
+    regrouped = polygons_from_rings(g.parts)
+    assert [len(p) for p in regrouped] == [3, 1, 2]
+    for rings in regrouped:
+        assert is_cw(rings[0])
+        assert all(not is_cw(r) for r in rings[1:])
+
+
+def test_levels_are_two_bits(rng):
+    geoms = [random_geometry(rng) for _ in range(50)]
+    cols = shred(geoms)
+    assert cols.rep.max() <= 3 and cols.defn.max() <= 1 and cols.type_rep.max() <= 1
+
+
+def test_permute_records_roundtrip(rng):
+    geoms = [random_geometry(rng, allow_collection=True) for _ in range(30)]
+    cols = shred(geoms)
+    perm = rng.permutation(30)
+    permuted = permute_records(cols, perm)
+    back = assemble(permuted)
+    assert back == [geoms[i] for i in perm]
+    # subset gather
+    sub = permute_records(cols, np.array([3, 1, 7]))
+    assert assemble(sub) == [geoms[3], geoms[1], geoms[7]]
+
+
+def test_slice_and_concat(rng):
+    geoms = [random_geometry(rng) for _ in range(20)]
+    cols = shred(geoms)
+    a, b = cols.slice_records(0, 7), cols.slice_records(7, 20)
+    merged = concat_columns([a, b])
+    assert assemble(merged) == geoms
+
+
+def test_record_centroids_match_bbox(rng):
+    geoms = [random_geometry(rng) for _ in range(40)]
+    cols = shred(geoms)
+    cx, cy = record_centroids(cols)
+    for i, g in enumerate(geoms):
+        if g.num_points == 0:
+            continue
+        b = g.bbox()
+        assert abs(cx[i] - (b[0] + b[2]) / 2) < 1e-9
+        assert abs(cy[i] - (b[1] + b[3]) / 2) < 1e-9
+
+
+def test_ragged_fastpath_matches_object_path(rng):
+    n, k = 200, 12
+    coords = _coords(rng, n * k)
+    cols_fast = from_ragged(
+        np.full(n, TYPE_MULTIPOINT, np.uint8), coords,
+        np.ones(n * k, np.int64), np.full(n, k, np.int64),
+    )
+    geoms = [Geometry.multipoint(coords[i * k : (i + 1) * k]) for i in range(n)]
+    cols_obj = shred(geoms)
+    for f in ("types", "type_rep", "rep", "defn", "x", "y"):
+        assert np.array_equal(getattr(cols_fast, f), getattr(cols_obj, f)), f

@@ -1,0 +1,131 @@
+"""Pallas kernels vs ref.py oracles: shape/dtype sweeps in interpret mode."""
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp
+
+from repro.kernels import fp_delta as fpd
+from repro.kernels.flash_attention import attention
+from repro.kernels.minmax import page_minmax
+
+
+# ------------------------------------------------------------ fp_delta kernel
+@pytest.mark.parametrize("gen", ["smooth", "random", "constant", "mixed"])
+@pytest.mark.parametrize("n", [1, 1000, 1024, 4096, 5000])
+def test_fp_delta_kernel_roundtrip(rng, gen, n):
+    if gen == "smooth":
+        x = (np.cumsum(rng.normal(0, 1e-4, n)) + 41).astype(np.float32)
+    elif gen == "random":
+        x = rng.integers(-2**31, 2**31 - 1, n).astype(np.int32).view(np.float32)
+    elif gen == "constant":
+        x = np.full(n, 2.5, np.float32)
+    else:
+        x = (np.cumsum(rng.normal(0, 1e-4, n)) + 41).astype(np.float32)
+        x[:: max(n // 7, 1)] = rng.normal(0, 1e6, len(x[:: max(n // 7, 1)]))
+    s_k = fpd.encode(x, use_pallas=True)
+    s_r = fpd.encode(x, use_pallas=False)
+    assert np.array_equal(np.asarray(s_k.packed), np.asarray(s_r.packed))
+    assert np.array_equal(np.asarray(s_k.widths), np.asarray(s_r.widths))
+    assert np.array_equal(np.asarray(s_k.anchors), np.asarray(s_r.anchors))
+    for use_pallas in (True, False):
+        y = fpd.decode(s_k, use_pallas=use_pallas)
+        assert np.array_equal(np.asarray(y).view(np.int32), x.view(np.int32))
+
+
+def test_fp_delta_bytes_roundtrip(rng):
+    x = (np.cumsum(rng.normal(0, 1e-3, 20_000)) - 8.6).astype(np.float32)
+    buf = fpd.compress_array(x)
+    y = fpd.decompress_array(buf, x.shape, np.float32)
+    assert np.array_equal(y.view(np.int32), x.view(np.int32))
+    assert len(buf) < x.nbytes
+
+
+def test_fp_delta_int32(rng):
+    x = rng.integers(-5000, 5000, 3000).astype(np.int32)
+    buf = fpd.compress_array(x)
+    assert np.array_equal(fpd.decompress_array(buf, x.shape, np.int32), x)
+
+
+def test_width_law(rng):
+    """Block width must be the smallest pow2 covering the max delta bits."""
+    from repro.kernels.fp_delta.ref import MINIBLOCK, encode_blocks_ref
+    x = np.zeros((1, MINIBLOCK), np.float32)
+    xi = x.view(np.int32)
+    xi[0, 1:] = np.arange(MINIBLOCK - 1) % 3  # deltas {1,1,-2}: zigzag max 3 -> w=2
+    outs = jax.jit(encode_blocks_ref)(jnp.asarray(x))
+    assert int(outs[1][0]) == 2
+    # a single 11-bit outlier becomes an exception, width stays 2
+    xi[0, 1] = 300
+    outs = jax.jit(encode_blocks_ref)(jnp.asarray(x))
+    assert int(outs[1][0]) == 2
+    assert int(outs[5][0]) >= 1  # exception recorded
+
+
+def test_exception_path(rng):
+    """Blocks with isolated huge outliers keep a narrow width + exceptions."""
+    from repro.kernels.fp_delta.ref import MINIBLOCK, encode_blocks_ref
+    import jax.numpy as jnp
+    x = (np.cumsum(rng.normal(0, 1e-4, MINIBLOCK)) + 40).astype(np.float32)
+    x[100] = -1e30
+    x[500] = np.float32(np.inf)
+    outs = jax.jit(encode_blocks_ref)(jnp.asarray(x[None]))
+    widths, counts = outs[1], outs[5]
+    assert int(widths[0]) < 32
+    assert int(counts[0]) >= 2
+    s = fpd.encode(x)
+    y = fpd.decode(s)
+    assert np.array_equal(np.asarray(y).view(np.int32), x.view(np.int32))
+
+
+def test_arbitrary_width_group_packing(rng):
+    """pack/unpack at every supported width is the identity."""
+    from repro.kernels.fp_delta.ref import WIDTHS, pack_candidate, unpack_candidate
+    import jax.numpy as jnp
+    for w in WIDTHS:
+        vals = jnp.asarray(rng.integers(0, 2**w, 1024, dtype=np.int64).astype(np.uint32))
+        words = pack_candidate(vals, w)
+        assert int(jnp.count_nonzero(words[1024 * w // 32:])) == 0, w
+        back = unpack_candidate(words, w)
+        assert np.array_equal(np.asarray(back), np.asarray(vals)), w
+
+
+# ---------------------------------------------------------------- minmax
+@pytest.mark.parametrize("shape", [(1, 2048), (4, 4096), (3, 5000), (2, 100)])
+def test_minmax_kernel(rng, shape):
+    x = jnp.asarray(rng.normal(0, 5, shape).astype(np.float32))
+    mn_k, mx_k = page_minmax(x, use_pallas=True)
+    assert np.allclose(np.asarray(mn_k), np.asarray(x).min(1))
+    assert np.allclose(np.asarray(mx_k), np.asarray(x).max(1))
+
+
+# ---------------------------------------------------------- flash attention
+@pytest.mark.parametrize(
+    "b,hq,hkv,sq,sk,d,causal",
+    [
+        (2, 4, 4, 128, 128, 64, True),
+        (1, 8, 2, 256, 256, 64, True),
+        (2, 2, 2, 128, 128, 32, False),
+        (1, 4, 4, 128, 384, 64, True),   # decode-aligned rectangular
+        (1, 2, 2, 1, 128, 64, True),     # single-token decode
+        (1, 2, 2, 100, 128, 64, True),   # ragged q (front padding)
+    ],
+)
+def test_flash_vs_oracle(rng, b, hq, hkv, sq, sk, d, causal):
+    q = jnp.asarray(rng.normal(0, 1, (b, hq, sq, d)).astype(np.float32))
+    k = jnp.asarray(rng.normal(0, 1, (b, hkv, sk, d)).astype(np.float32))
+    v = jnp.asarray(rng.normal(0, 1, (b, hkv, sk, d)).astype(np.float32))
+    o_ref = attention(q, k, v, causal=causal, use_pallas=False)
+    o_pal = attention(q, k, v, causal=causal, use_pallas=True)
+    assert float(jnp.max(jnp.abs(o_ref - o_pal))) < 2e-5
+
+
+def test_flash_bf16(rng):
+    q = jnp.asarray(rng.normal(0, 1, (1, 2, 128, 64))).astype(jnp.bfloat16)
+    k = jnp.asarray(rng.normal(0, 1, (1, 2, 128, 64))).astype(jnp.bfloat16)
+    v = jnp.asarray(rng.normal(0, 1, (1, 2, 128, 64))).astype(jnp.bfloat16)
+    o_ref = attention(q, k, v, causal=True, use_pallas=False)
+    o_pal = attention(q, k, v, causal=True, use_pallas=True)
+    err = float(jnp.max(jnp.abs(o_ref.astype(jnp.float32) - o_pal.astype(jnp.float32))))
+    assert err < 3e-2

@@ -1,0 +1,100 @@
+"""Optimizers vs closed-form references; schedules; clipping."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.train.optimizer import (
+    OptConfig,
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+    global_norm,
+    lr_schedule,
+    opt_init,
+    opt_update,
+)
+
+
+def numpy_adamw(params, grads, m, v, t, oc):
+    out_p, out_m, out_v = {}, {}, {}
+    lr = float(lr_schedule(oc, jnp.asarray(t)))
+    # replicate the global-norm clip
+    gn = np.sqrt(sum(float((np.asarray(g) ** 2).sum()) for g in grads.values()))
+    scale = min(1.0, oc.grad_clip / max(gn, 1e-9))
+    for k in params:
+        g = np.asarray(grads[k]) * scale
+        mm = oc.b1 * np.asarray(m[k]) + (1 - oc.b1) * g
+        vv = oc.b2 * np.asarray(v[k]) + (1 - oc.b2) * g * g
+        mh = mm / (1 - oc.b1**t)
+        vh = vv / (1 - oc.b2**t)
+        upd = mh / (np.sqrt(vh) + oc.eps)
+        if np.asarray(params[k]).ndim >= 2:
+            upd = upd + oc.weight_decay * np.asarray(params[k])
+        out_p[k] = np.asarray(params[k]) - lr * upd
+        out_m[k], out_v[k] = mm, vv
+    return out_p, out_m, out_v
+
+
+def test_adamw_matches_reference(rng):
+    oc = OptConfig(lr=1e-2, warmup_steps=0, total_steps=1000, grad_clip=1.0,
+                   weight_decay=0.1)
+    params = {"w": jnp.asarray(rng.normal(0, 1, (4, 3)).astype(np.float32)),
+              "b": jnp.asarray(rng.normal(0, 1, (3,)).astype(np.float32))}
+    m = {k: jnp.zeros_like(v) for k, v in params.items()}
+    v = {k: jnp.zeros_like(vv) for k, vv in params.items()}
+    state = {"m": m, "v": v, "step": jnp.zeros((), jnp.int32)}
+    p_np, m_np, v_np = params, m, v
+    for t in range(1, 4):
+        grads = {k: jnp.asarray(rng.normal(0, 1, vv.shape).astype(np.float32))
+                 for k, vv in params.items()}
+        new_p, state, _ = adamw_update(oc, p_np, grads, state)
+        ref_p, ref_m, ref_v = numpy_adamw(
+            {k: np.asarray(x) for k, x in p_np.items()},
+            {k: np.asarray(x) for k, x in grads.items()},
+            {k: np.asarray(x) for k, x in (m_np if t == 1 else m_np).items()},
+            {k: np.asarray(x) for k, x in (v_np if t == 1 else v_np).items()},
+            t, oc,
+        )
+        for k in params:
+            assert np.allclose(np.asarray(new_p[k]), ref_p[k], atol=1e-5), k
+        p_np, m_np, v_np = new_p, state["m"], state["v"]
+
+
+def test_lr_schedule_shape():
+    oc = OptConfig(lr=1.0, warmup_steps=10, total_steps=100, min_lr_ratio=0.1)
+    lrs = [float(lr_schedule(oc, jnp.asarray(s))) for s in range(0, 101, 5)]
+    assert lrs[0] == 0.0
+    assert abs(lrs[2] - 1.0) < 1e-6          # end of warmup
+    assert lrs[-1] == pytest.approx(0.1, rel=1e-3)  # cosine floor
+    assert all(a >= b - 1e-9 for a, b in zip(lrs[2:], lrs[3:]))  # monotone decay
+
+
+def test_grad_clip(rng):
+    g = {"w": jnp.asarray(rng.normal(0, 100, (64,)).astype(np.float32))}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(global_norm(clipped)) <= 1.0 + 1e-4
+    assert float(norm) > 1.0
+
+
+def test_adafactor_memory_factored(rng):
+    oc = OptConfig(kind="adafactor")
+    params = {"w": jnp.asarray(rng.normal(0, 1, (32, 16)).astype(np.float32))}
+    state = opt_init(oc, params)
+    assert state["f"]["w"]["vr"].shape == (32,)
+    assert state["f"]["w"]["vc"].shape == (16,)
+    grads = {"w": jnp.asarray(rng.normal(0, 1, (32, 16)).astype(np.float32))}
+    new_p, state, _ = opt_update(oc, params, grads, state)
+    assert np.isfinite(np.asarray(new_p["w"])).all()
+
+
+def test_bf16_moment_storage(rng):
+    params = {"w": jnp.asarray(rng.normal(0, 1, (8, 8)).astype(np.float32))}
+    state = adamw_init(params, "bfloat16")
+    assert state["m"]["w"].dtype == jnp.bfloat16
+    oc = OptConfig()
+    grads = {"w": jnp.ones((8, 8), jnp.float32)}
+    new_p, state, _ = adamw_update(oc, params, grads, state)
+    assert state["m"]["w"].dtype == jnp.bfloat16
+    assert np.isfinite(np.asarray(new_p["w"])).all()

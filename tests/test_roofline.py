@@ -1,0 +1,109 @@
+"""Roofline machinery: HLO collective parser, correction math, model flops."""
+
+import numpy as np
+import pytest
+
+from repro.configs import SHAPES, get_config
+from repro.launch.roofline import (
+    Corrected,
+    correct_with_calibration,
+    count_params,
+    model_flops,
+    parse_collectives,
+    roofline_terms,
+)
+
+HLO = """
+HloModule test
+fused {
+  %p0 = f32[256,1024]{1,0} parameter(0)
+}
+ENTRY main {
+  %x = bf16[32,4096,128]{2,1,0} parameter(0)
+  %small = f32[4,2048]{1,0} parameter(1)
+  %big = f32[16,128]{1,0} parameter(2)
+  %ar = bf16[32,4096,128]{2,1,0} all-reduce(%x), replica_groups={{0,1,2,3},{4,5,6,7}}, to_apply=add
+  %ag = f32[64,2048]{1,0} all-gather(%small), replica_groups=[16,16]<=[256], dimensions={0}
+  %rs = f32[8,128]{1,0} reduce-scatter(%big), replica_groups={{0,1}}, to_apply=add
+  %cp = f32[1024]{0} collective-permute(%x), source_target_pairs={{0,1}}
+  %a2a = f32[16,64]{1,0} all-to-all(%big), replica_groups={{0,1,2,3}}
+}
+"""
+
+
+def test_parse_collectives_shapes_and_ring_model():
+    out = parse_collectives(HLO)
+    assert set(out) == {"all-reduce", "all-gather", "reduce-scatter",
+                        "collective-permute", "all-to-all"}
+    ar = out["all-reduce"]
+    s = 32 * 4096 * 128 * 2  # bf16
+    assert ar["count"] == 1
+    assert ar["ring_bytes"] == pytest.approx(2 * s * 3 / 4)
+    ag = out["all-gather"]
+    assert ag["ring_bytes"] == pytest.approx(64 * 2048 * 4 * 15 / 16)
+    rs = out["reduce-scatter"]
+    assert rs["raw_bytes"] == 16 * 128 * 4  # operand resolved via symbol table
+    assert rs["ring_bytes"] == pytest.approx(16 * 128 * 4 / 2)
+    cp = out["collective-permute"]
+    assert cp["ring_bytes"] == 1024 * 4
+
+
+def test_correction_math():
+    group = {"flops": 10.0, "bytes": 100.0, "coll_ring": 5.0, "coll_raw": 3.0}
+    layer = {"flops": 1.0, "bytes": 10.0, "coll_ring": 0.5, "coll_raw": 0.3}
+    outside = {"flops": 7.0, "bytes": 70.0, "coll_ring": 0.0, "coll_raw": 0.0}
+    c = correct_with_calibration(group, layer, outside, n_layers=38, period=6)
+    assert c.flops == 7.0 + 6 * 10.0 + 2 * 1.0
+    assert c.bytes == 70.0 + 6 * 100.0 + 2 * 10.0
+
+
+def test_roofline_terms_dominance():
+    t = roofline_terms(flops=197e12, bytes_=0.0, coll_ring=0.0)
+    assert t["dominant"] == "compute" and t["compute_s"] == pytest.approx(1.0)
+    assert t["roofline_fraction"] == pytest.approx(1.0)
+    t = roofline_terms(flops=197e10, bytes_=819e9, coll_ring=0.0)
+    assert t["dominant"] == "memory"
+    t = roofline_terms(flops=0.0, bytes_=0.0, coll_ring=50e9 * 3)
+    assert t["dominant"] == "collective" and t["collective_s"] == pytest.approx(3.0)
+
+
+def test_count_params_sane():
+    # internlm2-1.8b non-embedding params ~1.5e9
+    n = count_params(get_config("internlm2-1.8b"))
+    assert 1.2e9 < n < 1.8e9
+    # arctic active << total
+    total = count_params(get_config("arctic-480b"), active_only=False)
+    active = count_params(get_config("arctic-480b"), active_only=True)
+    assert total > 4e11 and active < 0.1 * total
+    # zamba2 shared block execution-weighted
+    za = count_params(get_config("zamba2-1.2b"), active_only=True)
+    zs = count_params(get_config("zamba2-1.2b"), active_only=False)
+    assert za > zs
+
+
+def test_model_flops_shapes():
+    cfg = get_config("qwen3-8b")
+    f_train = model_flops(cfg, SHAPES["train_4k"])
+    f_pre = model_flops(cfg, SHAPES["prefill_32k"])
+    f_dec = model_flops(cfg, SHAPES["decode_32k"])
+    assert f_train == pytest.approx(6 * count_params(cfg, True) * 256 * 4096)
+    assert f_pre == pytest.approx(2 * count_params(cfg, True) * 32 * 32768)
+    assert f_dec == pytest.approx(2 * count_params(cfg, True) * 128)
+
+
+def test_input_specs_no_allocation():
+    """input_specs must return ShapeDtypeStructs for every cell kind."""
+    import jax
+
+    from repro.launch.dryrun import input_specs
+
+    cfg = get_config("internlm2-1.8b")
+    for shape_name in ("train_4k", "prefill_32k", "decode_32k"):
+        specs = input_specs(cfg, SHAPES[shape_name])
+        for leaf in jax.tree.leaves(specs):
+            assert isinstance(leaf, jax.ShapeDtypeStruct), type(leaf)
+    tr = input_specs(cfg, SHAPES["train_4k"])
+    assert set(tr) == {"params", "opt_state", "batch"}
+    de = input_specs(cfg, SHAPES["decode_32k"])
+    assert de["tokens"].shape == (128, 1)
+    assert de["cache"]["layers"]["k"].shape[2] == 32768

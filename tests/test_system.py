@@ -1,0 +1,75 @@
+"""End-to-end behaviour tests: the paper's full pipeline as one system.
+
+Data lake (Spatial Parquet write, Hilbert sort, FP-delta, zstd) -> indexed
+range read -> tokenize -> train a trajectory LM -> checkpoint (FP-delta
+compressed) -> serve continuations. Each stage's invariants are asserted.
+"""
+
+import dataclasses
+import os
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.reader import SpatialParquetReader
+from repro.core.writer import write_file
+from repro.data.pipeline import Prefetcher, TrajectoryBatcher
+from repro.data.synthetic import PORTO_BBOX, porto_taxi_like
+from repro.data.tokenizer import GeoTokenizer
+from repro.launch.mesh import make_host_mesh
+from repro.serve.scheduler import BatchedServer
+from repro.train.checkpoint import CheckpointManager
+from repro.train.optimizer import OptConfig
+from repro.train.train_loop import run_train_loop
+
+
+def test_lake_to_model_to_serving(tmp_path):
+    # ---- 1. the data lake: paper's format end to end
+    cols = porto_taxi_like(n_traj=800, seed=11)
+    lake_file = os.path.join(tmp_path, "porto.spqf")
+    write_file(lake_file, columns=cols, sort="hilbert", codec="zstd",
+               page_values=8192)
+    raw_bytes = cols.n_values * 16
+    assert os.path.getsize(lake_file) < raw_bytes, "FP-delta+zstd must beat raw"
+
+    with SpatialParquetReader(lake_file) as r:
+        assert r.n_records == 800
+        # the light-weight index prunes a city-corner query
+        q = (PORTO_BBOX[0], PORTO_BBOX[1],
+             PORTO_BBOX[0] + 0.05, PORTO_BBOX[1] + 0.04)
+        sub, _, st = r.read_columnar(bbox=q, refine=True)
+        assert st.pages_read <= st.pages_total
+        if sub is not None and sub.n_records:
+            assert sub.x.min() >= q[0] - 0.05  # records intersect the box
+
+    # ---- 2. tokenize + train (loss must decrease)
+    tok = GeoTokenizer(PORTO_BBOX, order=6)
+    cfg = dataclasses.replace(get_config("spatial-lm"), vocab=tok.vocab,
+                              n_layers=2, d_model=128)
+    data = Prefetcher(TrajectoryBatcher([lake_file], tok, seq_len=64,
+                                        global_batch=4))
+    mesh = make_host_mesh(1, 1)
+    mgr = CheckpointManager(tmp_path / "ck", compress=True, async_save=False)
+    oc = OptConfig(lr=1e-3, warmup_steps=5, total_steps=30, grad_clip=0.5)
+    state, hist = run_train_loop(cfg, mesh, oc, iter(data), global_batch=4,
+                                 seq=64, steps=20, checkpoint_mgr=mgr,
+                                 checkpoint_every=10, log_every=10)
+    assert hist[-1]["loss"] < hist[0]["loss"], "training must learn"
+    assert mgr.latest_step() == 20
+    assert mgr.last_stats.stored_bytes <= mgr.last_stats.raw_bytes
+
+    # ---- 3. serve continuations from the trained params
+    srv = BatchedServer(cfg, state.params, max_batch=2, max_len=96)
+    mat = tok.encode_trajectories(cols.slice_records(0, 4), 32)
+    for i in range(3):
+        srv.submit(mat[i][mat[i] > 0][:10], max_new_tokens=6, rid=i)
+    done = srv.run()
+    assert len(done) == 3
+    cell_w = (PORTO_BBOX[2] - PORTO_BBOX[0]) / 63  # half-cell edge overshoot
+    for req in done:
+        cells = [t for t in req.out_tokens if t >= 3]
+        if cells:  # generated cells decode inside the tokenizer's bbox
+            xy = tok.decode_tokens(np.array(cells))
+            assert (xy[:, 0] >= PORTO_BBOX[0] - cell_w).all()
+            assert (xy[:, 0] <= PORTO_BBOX[2] + cell_w).all()

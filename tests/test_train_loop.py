@@ -1,0 +1,83 @@
+"""Training loop: learning, resume, data pipeline integration."""
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs import get_config
+from repro.data.pipeline import Prefetcher, synthetic_token_iter
+from repro.launch.mesh import make_host_mesh
+from repro.train.checkpoint import CheckpointManager
+from repro.train.optimizer import OptConfig
+from repro.train.train_loop import run_train_loop
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return make_host_mesh(1, 1)
+
+
+def test_loss_decreases_and_resumes(tmp_path, mesh):
+    cfg = get_config("internlm2-1.8b").reduced()
+    oc = OptConfig(lr=1e-3, warmup_steps=5, total_steps=60)
+    data = synthetic_token_iter(cfg.vocab, seq_len=64, global_batch=4)
+    mgr = CheckpointManager(tmp_path, async_save=False, keep=2)
+    state, hist = run_train_loop(
+        cfg, mesh, oc, data, global_batch=4, seq=64, steps=25,
+        checkpoint_mgr=mgr, checkpoint_every=10, log_every=5,
+    )
+    assert hist[-1]["loss"] < hist[0]["loss"] - 0.3
+    # resume continues where it stopped
+    state2, hist2 = run_train_loop(
+        cfg, mesh, oc, data, global_batch=4, seq=64, steps=30,
+        checkpoint_mgr=mgr, checkpoint_every=0, log_every=5,
+    )
+    assert hist2[0]["step"] == 25
+
+
+def test_grad_accum_equivalence(mesh, rng):
+    """accum=2 over the same tokens gives (near-)identical update to accum=1."""
+    import dataclasses
+    from repro.models.model import build_model
+    from repro.train.optimizer import opt_init
+    from repro.train.train_loop import make_train_step
+
+    base = get_config("internlm2-1.8b").reduced()
+    oc = OptConfig(lr=1e-3, warmup_steps=0, total_steps=10, grad_clip=1e9)
+    toks = rng.integers(0, base.vocab, (4, 32)).astype(np.int32)
+    outs = {}
+    for accum in (1, 2):
+        cfg = dataclasses.replace(base, grad_accum=accum)
+        step_fn, pshard, oshard, bstruct, bshard, _ = make_train_step(
+            cfg, mesh, oc, global_batch=4, seq=32)
+        model = build_model(cfg)
+        params = jax.jit(model.init, out_shardings=pshard)(jax.random.PRNGKey(3))
+        opt = jax.jit(lambda p: opt_init(oc, p, cfg.opt_state_dtype),
+                      out_shardings=oshard)(params)
+        batch = {"tokens": toks.reshape(accum, 4 // accum, 32)}
+        new_p, _, metrics = step_fn(params, opt, batch)
+        outs[accum] = (jax.tree.leaves(new_p)[0], float(metrics["loss"]))
+    # same data, same init: losses match to accumulation-order tolerance
+    assert abs(outs[1][1] - outs[2][1]) < 5e-3
+    assert np.allclose(np.asarray(outs[1][0]), np.asarray(outs[2][0]), atol=5e-4)
+
+
+def test_prefetcher_stall_reuse():
+    import time
+
+    def slow_gen():
+        yield {"x": 1}
+        time.sleep(2.0)
+        yield {"x": 2}
+
+    pf = Prefetcher(slow_gen(), depth=1, stall_timeout=0.2)
+    first = next(pf)
+    assert first == {"x": 1}
+    second = next(pf)  # producer still sleeping: reuse
+    assert second == {"x": 1}
+    assert pf.stalls >= 1
+    third = next(pf)
+    while third == {"x": 1}:
+        third = next(pf)
+    assert third == {"x": 2}
