@@ -13,6 +13,7 @@ from repro.core.writer import write_file
 from repro.data.pipeline import Prefetcher, TrajectoryBatcher
 from repro.data.synthetic import PORTO_BBOX, porto_taxi_like
 from repro.data.tokenizer import GeoTokenizer
+from repro.core.pages import best_codec
 
 
 def run(scale: float = 1.0) -> list[dict]:
@@ -22,7 +23,7 @@ def run(scale: float = 1.0) -> list[dict]:
     for i in range(2):
         cols = porto_taxi_like(n_traj=max(int(2000 * scale), 100), seed=i)
         p = os.path.join(tmp, f"part{i}.spqf")
-        write_file(p, columns=cols, sort="hilbert", codec="zstd")
+        write_file(p, columns=cols, sort="hilbert", codec=best_codec())
         files.append(p)
 
     tok = GeoTokenizer(PORTO_BBOX, order=6)

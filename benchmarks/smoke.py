@@ -1,0 +1,88 @@
+"""Smoke read/write benchmark: a fast perf-trajectory anchor for CI.
+
+Writes a JSON file (default ``BENCH_read.json``) with wall-clock seconds and
+byte counts for the PT dataset so later PRs can regress against a recorded
+baseline::
+
+    PYTHONPATH=src python -m benchmarks.smoke [--scale 0.25] [--out BENCH_read.json]
+
+Reported fields: ``write_s``, ``read_columnar_s`` (coalesced fast path),
+``read_columnar_legacy_s`` (one read per blob, same decode), ``file_bytes``,
+``raw_coord_bytes``, ``n_records``, ``n_values``. Timings are best-of-N to
+shrink scheduler noise.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import platform
+import time
+
+from repro.core.reader import SpatialParquetReader
+from repro.core.writer import write_file
+
+from .common import SCALE_1, make_dataset, tmppath
+
+
+def run(scale: float = 0.25, dataset: str = "PT", repeats: int = 3) -> dict:
+    cols = make_dataset(dataset, scale, sort="hilbert")
+    path = tmppath(".spqf")
+    try:
+        write_s = min(
+            _timed(lambda: write_file(path, columns=cols, sort=None, codec="none"))
+            for _ in range(repeats)
+        )
+        file_bytes = os.path.getsize(path)
+        with SpatialParquetReader(path) as r:
+            read_s = min(
+                _timed(lambda: r.read_columnar()) for _ in range(repeats)
+            )
+            read_legacy_s = min(
+                _timed(lambda: r.read_columnar(coalesce=False)) for _ in range(repeats)
+            )
+            geo, _, stats = r.read_columnar()
+    finally:
+        if os.path.exists(path):
+            os.unlink(path)
+    return {
+        "dataset": dataset,
+        "scale": scale,
+        "scale_1_config": SCALE_1[dataset],
+        "write_s": round(write_s, 6),
+        "read_columnar_s": round(read_s, 6),
+        "read_columnar_legacy_s": round(read_legacy_s, 6),
+        "file_bytes": file_bytes,
+        "raw_coord_bytes": int(cols.n_values) * 2 * cols.x.dtype.itemsize,
+        "bytes_read": stats.bytes_read,
+        "n_records": int(geo.n_records),
+        "n_values": int(geo.n_values),
+        "python": platform.python_version(),
+        "machine": platform.machine(),
+    }
+
+
+def _timed(fn) -> float:
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--scale", type=float, default=0.25)
+    ap.add_argument("--dataset", default="PT")
+    ap.add_argument("--out", default="BENCH_read.json")
+    ap.add_argument("--repeats", type=int, default=3)
+    args = ap.parse_args()
+    result = run(scale=args.scale, dataset=args.dataset, repeats=args.repeats)
+    with open(args.out, "w") as fh:
+        json.dump(result, fh, indent=1)
+        fh.write("\n")
+    print(json.dumps(result, indent=1))
+    print(f"[smoke] saved {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -16,6 +16,7 @@ from repro.core import (
     SpatialParquetReader,
     SpatialParquetWriter,
 )
+from repro.core.pages import best_codec
 
 
 def main():
@@ -30,7 +31,7 @@ def main():
 
     # 2. Write: FP-delta encoding + Hilbert sort + zstd pages + timestamps
     with SpatialParquetWriter(
-        path, encoding="fp_delta", codec="zstd", sort="hilbert",
+        path, encoding="fp_delta", codec=best_codec(), sort="hilbert",
         page_values=8192, extra_schema={"ts": "<i8"},
     ) as w:
         w.write_geometries(pois, extra={"ts": np.arange(len(pois))})

@@ -23,6 +23,7 @@ import numpy as np
 from repro.core.reader import SpatialParquetReader
 from repro.core.writer import write_file
 from repro.data.synthetic import PORTO_BBOX, US_BBOX, ebird_like, porto_taxi_like
+from repro.core.pages import best_codec
 
 
 def main():
@@ -33,7 +34,7 @@ def main():
     paths = {}
     for name, cols in (("porto", pt), ("ebird", eb)):
         p = os.path.join(lake, f"{name}.spqf")
-        write_file(p, columns=cols, sort="hilbert", codec="zstd", page_values=8192)
+        write_file(p, columns=cols, sort="hilbert", codec=best_codec(), page_values=8192)
         paths[name] = p
         print(f"[lake] {name}: {cols.n_values} pts -> {os.path.getsize(p)/1e6:.2f} MB")
 

@@ -35,6 +35,7 @@ def main():
     import numpy as np
 
     from repro.configs import get_config
+    from repro.core.pages import best_codec
     from repro.core.writer import write_file
     from repro.data.pipeline import Prefetcher, TrajectoryBatcher
     from repro.data.synthetic import PORTO_BBOX, porto_taxi_like
@@ -50,7 +51,7 @@ def main():
     for shard in range(2):
         cols = porto_taxi_like(n_traj=args.n_traj // 2, seed=shard)
         p = os.path.join(lake, f"porto_{shard}.spqf")
-        write_file(p, columns=cols, sort="hilbert", codec="zstd")
+        write_file(p, columns=cols, sort="hilbert", codec=best_codec())
         files.append(p)
     lake_mb = sum(os.path.getsize(p) for p in files) / 1e6
     print(f"[lake] {len(files)} shards, {lake_mb:.1f} MB at {lake}")

@@ -1,8 +1,10 @@
 """GeoJSON (RFC 7946) baseline — the row-oriented text format of Table 2/3.
 
-Uses orjson (fast C JSON) to be fair on write/read time; compression is
-whole-file gzip exactly as the paper applies it ("the entire dataset is
-written as one giant .geojson.gz file").
+Uses orjson (fast C JSON) when available to be fair on write/read time,
+falling back to the stdlib ``json`` module otherwise (same bytes modulo
+float formatting; benchmark numbers then flatter Spatial Parquet, so treat
+them as an upper bound). Compression is whole-file gzip exactly as the paper
+applies it ("the entire dataset is written as one giant .geojson.gz file").
 """
 
 from __future__ import annotations
@@ -10,7 +12,24 @@ from __future__ import annotations
 import gzip
 
 import numpy as np
-import orjson
+
+try:
+    import orjson
+except ImportError:  # pragma: no cover - orjson is an optional speedup
+    import json as _json
+
+    class orjson:  # type: ignore[no-redef]
+        """Minimal stdlib shim for the two orjson entry points we use."""
+
+        @staticmethod
+        def dumps(obj) -> bytes:
+            return _json.dumps(obj, separators=(",", ":")).encode()
+
+        @staticmethod
+        def loads(blob):
+            if isinstance(blob, (bytes, bytearray, memoryview)):
+                blob = bytes(blob).decode()
+            return _json.loads(blob)
 
 from repro.core.columnar import assemble, multipolygon_polygons, shred
 from repro.core.geometry import (

@@ -16,7 +16,9 @@ from .fp_delta import (
     delta_bit_histogram,
     fp_delta_decode,
     fp_delta_encode,
+    fp_delta_encode_pages,
 )
+from .pages import CodecUnavailable, have_codec
 from .geometry import (
     TYPE_EMPTY,
     TYPE_GEOMETRYCOLLECTION,
@@ -42,7 +44,10 @@ __all__ = [
     "from_ragged",
     "fp_delta_encode",
     "fp_delta_decode",
+    "fp_delta_encode_pages",
     "compute_best_delta_bits",
+    "CodecUnavailable",
+    "have_codec",
     "delta_bit_histogram",
     "FPDeltaStats",
     "SpatialParquetWriter",

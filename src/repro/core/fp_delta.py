@@ -19,9 +19,34 @@ when the computed saving is nil): every value is stored raw at W bits.
 The codec is width-parametric: ``W=64`` covers float64/int64 (the paper's
 default), ``W=32`` covers float32/int32 (paper footnote 1; also the variant our
 TPU Pallas kernels implement, and the one used for checkpoint compression).
-All hot paths are vectorized numpy; decode is vectorized per reset segment
-with galloping chunk reads (sparse-escape streams — the only kind the n*
-optimizer emits — decode in O(n) with a handful of gathers).
+
+Hot-path structure (this module is the decode-CPU bottleneck of the whole
+read path, so every stage is one numpy pass):
+
+* **Encode** computes the zigzag deltas and the significant-bit histogram
+  exactly once and shares them between the ``n*`` optimizer and the token
+  emitter (:func:`fp_delta_encode`); :func:`fp_delta_encode_pages`
+  batch-encodes every page of a column from a single column-wide delta pass.
+* **Decode** (:func:`fp_delta_decode`) has no per-segment Python loop; work
+  never scales with the value count outside whole-array vector ops. The
+  exact escape count is recovered from the payload length (W >= 32 > 7 bits
+  of byte padding, so the division is exact), then marker positions are
+  resolved one of two ways. Sparse streams (a handful of escapes) use a
+  vectorized fixpoint: token offsets are guessed assuming no escapes,
+  markers found, offsets re-derived from the escape cumsum, repeated until
+  stable (typically <= 2 rounds; a stable assignment is necessarily the
+  unique correct one — token 0's offset is known, and by induction every
+  later offset is determined by the flags before it). Denser streams use the
+  candidate scan: one log-shift AND ladder over the packed words finds every
+  position where ``n`` consecutive ones start (``marker_candidates``), and a
+  short walk over those candidates — O(#escapes), not O(#values) — pins the
+  token-aligned ones as the true markers. Either way, reconstruction is ONE
+  segmented cumsum over all reset segments at once: cumsum the inline deltas
+  with escapes zeroed, then add a per-segment correction (raw value minus
+  the running sum at the escape) spread with ``np.repeat``.
+* ``out=`` lets callers (the coalesced reader) decode straight into a slice
+  of a preallocated coordinate array, eliminating list-append +
+  ``np.concatenate`` from the read path.
 """
 
 from __future__ import annotations
@@ -32,8 +57,10 @@ import numpy as np
 
 from .bitstream import (
     bytes_to_words,
+    marker_candidates,
     pack_tokens,
     read_one,
+    unpack_at,
     unpack_fixed,
     words_to_bytes,
 )
@@ -42,6 +69,11 @@ _SIGNED = {32: np.int32, 64: np.int64}
 _UNSIGNED = {32: np.uint32, 64: np.uint64}
 
 HEADER_BITS = 8
+
+_FIXPOINT_MAX_ROUNDS = 10
+# sparse/dense resolver switch: the fixpoint needs ~E+1 rounds, so beyond a
+# handful of escapes the candidate-scan resolver is strictly better
+_FIXPOINT_MAX_ESCAPES = 4
 
 
 def _as_int_bits(x: np.ndarray) -> tuple[np.ndarray, int]:
@@ -70,17 +102,20 @@ def unzigzag(z: np.ndarray, width: int) -> np.ndarray:
 
 
 def significant_bits(z: np.ndarray, width: int) -> np.ndarray:
-    """Number of significant bits of each unsigned value (0 for value 0)."""
+    """Number of significant bits of each unsigned value (0 for value 0).
+
+    One pass via the float64 exponent field, with an exact fix-up for the
+    one case float rounding can overshoot (values just below a power of
+    two round up, inflating the exponent by one).
+    """
     z64 = np.asarray(z).astype(np.uint64, copy=False)
-    out = np.zeros(z64.shape, dtype=np.int64)
-    nz = z64 != 0
-    v = z64.copy()
-    for shift in (32, 16, 8, 4, 2, 1):  # bit-halving ladder (exact, no float)
-        big = v >= (np.uint64(1) << np.uint64(shift))
-        out += np.where(big, shift, 0)
-        v = np.where(big, v >> np.uint64(shift), v)
-    out += nz.astype(np.int64)  # the leading 1 itself
-    return out
+    f = z64.astype(np.float64)
+    e = ((f.view(np.uint64) >> np.uint64(52)) & np.uint64(0x7FF)).astype(np.int64)
+    e -= 1022  # unbias: e = #bits of the rounded float (f in [2^(e-1), 2^e))
+    es = np.clip(e - 1, 0, 63).astype(np.uint64)
+    over = (z64 >> es) == 0  # z < 2^(e-1): rounding overshot, e is one high
+    sig = np.minimum(np.where(over, e - 1, e), 64)
+    return np.where(z64 == 0, 0, sig)
 
 
 def _zigzag_deltas(x: np.ndarray) -> tuple[np.ndarray, int]:
@@ -99,19 +134,24 @@ def delta_bit_histogram(x: np.ndarray) -> np.ndarray:
     return np.bincount(nbits, minlength=width + 1).astype(np.int64)
 
 
+def best_bits_from_histogram(h: np.ndarray, n_deltas: int, width: int) -> int:
+    """Paper Algorithm 3 from a precomputed histogram: exact argmin_n S(n)."""
+    if n_deltas <= 0:
+        return 0
+    suffix = np.cumsum(h[::-1])[::-1]  # suffix[n] = #deltas needing >= n bits
+    s_all = np.arange(width + 1, dtype=np.int64) * n_deltas
+    s_all[:-1] += width * suffix[1:]
+    s_all[0] = width * n_deltas  # n=0 == raw mode: every value raw
+    return int(np.argmin(s_all[:width]))  # n in [0, width)
+
+
 def compute_best_delta_bits(x: np.ndarray) -> int:
     """Paper Algorithm 3: exact argmin_n S(n) via suffix-summed histogram."""
     xi, width = _as_int_bits(x)
     n_deltas = len(xi) - 1
     if n_deltas <= 0:
         return 0
-    h = delta_bit_histogram(x)
-    suffix = np.cumsum(h[::-1])[::-1]  # suffix[n] = #deltas needing >= n bits
-    s_all = np.arange(width + 1, dtype=np.int64) * n_deltas
-    s_all[:-1] += width * suffix[1:]
-    s_all[0] = width * n_deltas  # n=0 == raw mode: every value raw
-    n_star = int(np.argmin(s_all[:width]))  # n in [0, width)
-    return n_star
+    return best_bits_from_histogram(delta_bit_histogram(x), n_deltas, width)
 
 
 @dataclass(frozen=True)
@@ -124,19 +164,17 @@ class FPDeltaStats:
     payload_bits: int    # total encoded bits incl. header
 
 
-def fp_delta_encode(x: np.ndarray, n_bits: int | None = None) -> tuple[bytes, FPDeltaStats]:
-    """Encode a 1-D array of 32/64-bit values. Returns (payload, stats)."""
-    xi, width = _as_int_bits(x)
-    u = _UNSIGNED[width]
-    n_values = len(xi)
+def _encode_tokens(
+    raw_bits: np.ndarray, z: np.ndarray, width: int, n: int
+) -> tuple[bytes, FPDeltaStats]:
+    """Emit the token stream for one page from precomputed zigzag deltas.
+
+    ``raw_bits``: every value's W-bit pattern as uint64; ``z``: the page's
+    zigzag deltas as uint64 (``len(z) == len(raw_bits) - 1``).
+    """
+    n_values = len(raw_bits)
     if n_values == 0:
         return b"", FPDeltaStats(0, 0, 0, 0)
-
-    n = compute_best_delta_bits(x) if n_bits is None else int(n_bits)
-    if not (0 <= n < width):
-        raise ValueError(f"n_bits must be in [0, {width}), got {n}")
-
-    raw_bits = xi.view(u).astype(np.uint64)
 
     if n == 0 or n_values == 1:
         # Raw mode: header n=0, then every value raw at W bits.
@@ -145,8 +183,6 @@ def fp_delta_encode(x: np.ndarray, n_bits: int | None = None) -> tuple[bytes, FP
         words, total = pack_tokens(vals, widths)
         return words_to_bytes(words, total), FPDeltaStats(n_values, 0, 0, total)
 
-    delta = xi[1:] - xi[:-1]
-    z = zigzag(delta, width).astype(np.uint64)
     marker = np.uint64((1 << n) - 1)
     overflow = z >= marker  # any significant bit above n-1, or == marker
 
@@ -169,19 +205,172 @@ def fp_delta_encode(x: np.ndarray, n_bits: int | None = None) -> tuple[bytes, FP
     return words_to_bytes(words, total), FPDeltaStats(n_values, n, n_over, total)
 
 
+def fp_delta_encode(x: np.ndarray, n_bits: int | None = None) -> tuple[bytes, FPDeltaStats]:
+    """Encode a 1-D array of 32/64-bit values. Returns (payload, stats).
+
+    One-pass: the zigzag deltas are computed once and shared between the
+    ``n*`` optimizer (Algorithm 3) and the token emitter. The default path is
+    the single-page case of :func:`fp_delta_encode_pages` so the two can
+    never diverge.
+    """
+    xi, width = _as_int_bits(x)
+    if n_bits is None:
+        return fp_delta_encode_pages(xi, [(0, len(xi))])[0]
+
+    n = int(n_bits)
+    if not (0 <= n < width):
+        raise ValueError(f"n_bits must be in [0, {width}), got {n}")
+    n_values = len(xi)
+    if n_values == 0:
+        return b"", FPDeltaStats(0, 0, 0, 0)
+    raw_bits = xi.view(_UNSIGNED[width]).astype(np.uint64)
+    if n_values >= 2:
+        z = zigzag(xi[1:] - xi[:-1], width).astype(np.uint64)
+    else:
+        z = np.zeros(0, dtype=np.uint64)
+    return _encode_tokens(raw_bits, z, width, n)
+
+
+def fp_delta_encode_pages(
+    x: np.ndarray, bounds: list[tuple[int, int]]
+) -> list[tuple[bytes, FPDeltaStats]]:
+    """Batch-encode value ranges ``[v0, v1)`` of one column as independent pages.
+
+    The column-wide zigzag deltas and significant-bit counts are computed in a
+    single pass; each page then only pays for its own histogram (``bincount``
+    over a slice) and token packing. Page ``[v0, v1)`` uses column deltas
+    ``d[v0 : v1-1]`` — the cross-page delta at ``v1-1`` is never encoded, so
+    the output is byte-identical to encoding each slice separately.
+    """
+    xi, width = _as_int_bits(x)
+    u = _UNSIGNED[width]
+    raw_bits = xi.view(u).astype(np.uint64)
+    if len(xi) >= 2:
+        z = zigzag(xi[1:] - xi[:-1], width).astype(np.uint64)
+        nbits = significant_bits(z, width)
+    else:
+        z = np.zeros(0, dtype=np.uint64)
+        nbits = np.zeros(0, dtype=np.int64)
+
+    out = []
+    for v0, v1 in bounds:
+        cnt = v1 - v0
+        if cnt <= 0:
+            out.append((b"", FPDeltaStats(0, 0, 0, 0)))
+            continue
+        zp = z[v0 : v1 - 1]
+        h = np.bincount(nbits[v0 : v1 - 1], minlength=width + 1).astype(np.int64)
+        n = best_bits_from_histogram(h, cnt - 1, width)
+        out.append(_encode_tokens(raw_bits[v0:v1], zp, width, n))
+    return out
+
+
 def _to_signed_scalar(base: np.uint64, width: int):
     return np.uint64(base).astype(_UNSIGNED[width]).view(_SIGNED[width])
 
 
-def fp_delta_decode(payload: bytes, n_values: int, dtype) -> np.ndarray:
-    """Decode ``n_values`` elements of ``dtype`` (paper Algorithm 2)."""
+def _resolve_escapes_fixpoint(
+    words: np.ndarray, start_bit: int, n_deltas: int, n: int, width: int, n_escapes: int
+) -> tuple[np.ndarray, np.ndarray] | None:
+    """Vectorized fixpoint: find each delta token's bit offset and marker flag.
+
+    Token ``j`` starts at ``start_bit + n*j + width*E_j`` where ``E_j`` is the
+    number of escapes among deltas ``< j``. Guess ``E = 0``, unpack, flag
+    markers, recompute ``E`` as the (clipped) exclusive cumsum, repeat until
+    stable. A stable assignment is the unique correct one (token 0's offset
+    is known; each later offset is determined by the flags before it). Each
+    round locks in at least one more escape, so sparse streams converge in
+    about ``n_escapes + 1`` rounds — typically <= 2. Returns
+    ``(offsets, flags)`` or None when not converged (denser streams use
+    :func:`_resolve_escapes_scan` instead).
+    """
+    marker = np.uint64((1 << n) - 1)
+    idx = np.arange(n_deltas, dtype=np.int64) * np.int64(n) + np.int64(start_bit)
+    esc_before = np.zeros(n_deltas, dtype=np.int64)
+    w64 = np.int64(width)
+    for _ in range(_FIXPOINT_MAX_ROUNDS):
+        offs = idx + w64 * esc_before
+        tok = unpack_at(words, offs, n)
+        flags = tok == marker
+        # clip keeps every offset inside the payload even mid-fixpoint
+        new_esc = np.minimum(np.cumsum(flags) - flags, n_escapes)
+        if np.array_equal(new_esc, esc_before):
+            return offs, flags
+        esc_before = new_esc
+    return None
+
+
+def _resolve_escapes_scan(
+    words: np.ndarray, start_bit: int, n_deltas: int, n: int, width: int, n_escapes: int
+) -> tuple[np.ndarray, np.ndarray]:
+    """Escape resolution for any marker density, exact and O(#escapes).
+
+    A reset marker is ``n`` consecutive set bits at a token-aligned offset.
+    :func:`marker_candidates` finds every bit position where ``n`` ones start
+    (one vectorized log-shift ladder over the packed words); an inline token
+    can never equal the marker, so a *token-aligned* candidate inside the
+    token region is always a real escape. The walk below consumes candidates
+    left to right — skipping unaligned ones (run spill from neighbouring
+    token/raw bits) — and jumps ``n + W`` bits past each confirmed marker.
+    Work is proportional to escapes found plus stray candidates, never to
+    the value count.
+    """
+    cands = marker_candidates(words, n)
+    esc_tok = np.empty(n_escapes, dtype=np.int64)
+    found = 0
+    pos = start_bit  # bit offset of the current segment's first token
+    j0 = 0           # token index of the current segment's first token
+    for c in cands.tolist():
+        if found == n_escapes:
+            break
+        if c < pos:
+            continue
+        d, r = divmod(c - pos, n)
+        if r:
+            continue  # candidate not token-aligned: spill from data bits
+        j = j0 + d
+        if j >= n_deltas:
+            break
+        esc_tok[found] = j
+        found += 1
+        pos = c + n + width  # skip the marker and its raw value
+        j0 = j + 1
+    flags = np.zeros(n_deltas, dtype=bool)
+    flags[esc_tok[:found]] = True
+    esc_before = np.cumsum(flags) - flags
+    offs = (
+        np.int64(start_bit)
+        + np.int64(n) * np.arange(n_deltas, dtype=np.int64)
+        + np.int64(width) * esc_before
+    )
+    return offs, flags
+
+
+def fp_delta_decode(
+    payload, n_values: int, dtype, out: np.ndarray | None = None
+) -> np.ndarray:
+    """Decode ``n_values`` elements of ``dtype`` (paper Algorithm 2).
+
+    ``payload`` may be any bytes-like buffer (``bytes``, ``memoryview``).
+    ``out``, if given, must be a contiguous 1-D array of exactly ``n_values``
+    elements of ``dtype``; the decode writes into it and returns it, letting
+    callers fill slices of a preallocated column without a concat pass.
+    """
     dtype = np.dtype(dtype)
     width = dtype.itemsize * 8
     if width not in (32, 64):
         raise TypeError(f"unsupported dtype {dtype}")
     s, u = _SIGNED[width], _UNSIGNED[width]
+    if out is not None:
+        if out.dtype != dtype or out.ndim != 1 or len(out) != n_values:
+            raise ValueError("out must be a 1-D array of n_values elements of dtype")
+        if not out.flags.c_contiguous:
+            raise ValueError("out must be C-contiguous")
     if n_values == 0:
-        return np.zeros(0, dtype=dtype)
+        return out if out is not None else np.zeros(0, dtype=dtype)
+
+    out_arr = out if out is not None else np.empty(n_values, dtype=dtype)
+    out_int = out_arr.view(s)
 
     words = bytes_to_words(payload)
     n = read_one(words, 0, HEADER_BITS)
@@ -189,51 +378,52 @@ def fp_delta_decode(payload: bytes, n_values: int, dtype) -> np.ndarray:
 
     if n == 0:
         raws = unpack_fixed(words, cursor, n_values, width)
-        return raws.astype(np.uint64).astype(u).view(dtype)
+        out_int[:] = raws.astype(u).view(s)
+        return out_arr
 
-    marker = np.uint64((1 << n) - 1)
     first = np.uint64(read_one(words, cursor, width))
     cursor += width
+    out_int[0] = _to_signed_scalar(first, width)
+    n_deltas = n_values - 1
+    if n_deltas == 0:
+        return out_arr
 
-    # segments: list of (base raw bits, [delta-run chunks]).
-    segments: list[tuple[np.uint64, list[np.ndarray]]] = [(first, [])]
-    produced = 1
-    gallop = 4096
-    while produced < n_values:
-        remaining = n_values - produced
-        chunk = unpack_fixed(words, cursor, min(remaining, gallop), n)
-        hits = np.flatnonzero(chunk == marker)
-        if len(hits):
-            take = int(hits[0])
-            # adapt to the observed segment length (marker-dense streams)
-            gallop = min(max(2 * max(take, 32), 64), 1 << 22)
-        else:
-            take = len(chunk)
-            gallop = min(gallop * 2, 1 << 22)
-        if take:
-            segments[-1][1].append(chunk[:take])
-            produced += take
-            cursor += take * n
-        if len(hits) and produced < n_values:
-            cursor += n  # consume the marker
-            base = np.uint64(read_one(words, cursor, width))
-            cursor += width
-            segments.append((base, []))
-            produced += 1
+    # Exact escape count from the payload length: total bits are
+    # HEADER + W + n*D + W*E plus < 8 bits of byte padding, and W >= 32 > 7,
+    # so the integer division is exact for well-formed payloads.
+    n_escapes = (len(payload) * 8 - cursor - n * n_deltas) // width
+    n_escapes = max(0, min(int(n_escapes), n_deltas))
 
-    out = np.empty(n_values, dtype=s)
-    pos = 0
-    for base, run_chunks in segments:
-        base_signed = _to_signed_scalar(base, width)
-        out[pos] = base_signed
-        k = 0
-        if run_chunks:
-            run = run_chunks[0] if len(run_chunks) == 1 else np.concatenate(run_chunks)
-            k = len(run)
-            deltas = unzigzag(run.astype(np.uint64).astype(u), width)
-            out[pos + 1 : pos + 1 + k] = base_signed + np.cumsum(deltas, dtype=s)
-        pos += 1 + k
-    return out.view(dtype)
+    if n_escapes == 0:
+        z = unpack_fixed(words, cursor, n_deltas, n)
+        deltas = unzigzag(z.astype(u), width)
+        out_int[1:] = out_int[0] + np.cumsum(deltas, dtype=s)
+        return out_arr
+
+    resolved = None
+    if n_escapes <= _FIXPOINT_MAX_ESCAPES:
+        resolved = _resolve_escapes_fixpoint(words, cursor, n_deltas, n, width, n_escapes)
+    if resolved is None:
+        resolved = _resolve_escapes_scan(words, cursor, n_deltas, n, width, n_escapes)
+
+    offs, flags = resolved
+    tok = unpack_at(words, offs, n)
+    # One segmented cumsum over all reset segments at once: cumsum the inline
+    # deltas (escapes contribute 0), then add a per-segment correction so each
+    # escape restarts the running sum at its raw value.
+    deltas = np.where(flags, s(0), unzigzag(tok.astype(u), width))
+    running = out_int[0] + np.cumsum(deltas, dtype=s)
+    esc_idx = np.flatnonzero(flags)
+    if not len(esc_idx):  # malformed payload claimed escapes; decode best-effort
+        out_int[1:] = running
+        return out_arr
+    raws = unpack_at(words, offs[esc_idx] + n, width)
+    raw_signed = raws.astype(u).view(s)
+    corr = raw_signed - running[esc_idx]
+    reps = np.diff(np.append(esc_idx, n_deltas))
+    out_int[1 : 1 + esc_idx[0]] = running[: esc_idx[0]]
+    out_int[1 + esc_idx[0] :] = running[esc_idx[0] :] + np.repeat(corr, reps)
+    return out_arr
 
 
 def encoded_size_bits(x: np.ndarray, n: int) -> int:

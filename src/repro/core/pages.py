@@ -19,7 +19,7 @@ try:
 except ImportError:  # pragma: no cover - zstd optional
     _zstd = None
 
-from .fp_delta import fp_delta_decode, fp_delta_encode
+from .fp_delta import fp_delta_decode, fp_delta_encode, fp_delta_encode_pages
 
 ENC_FP_DELTA = "fp_delta"
 ENC_RAW = "raw"
@@ -29,26 +29,54 @@ CODEC_GZIP = "gzip"
 CODEC_ZSTD = "zstd"
 
 
-def compress(buf: bytes, codec: str) -> bytes:
+class CodecUnavailable(RuntimeError):
+    """Raised when a file/page requests a codec whose wheel is not installed.
+
+    The byte format itself is fine — install the codec (e.g. ``zstandard``)
+    or rewrite the file with ``codec="gzip"``/``"none"``.
+    """
+
+
+def have_codec(codec: str) -> bool:
+    """True if ``codec`` can be used in this environment."""
+    if codec in (CODEC_NONE, CODEC_GZIP):
+        return True
+    if codec == CODEC_ZSTD:
+        return _zstd is not None
+    return False
+
+
+def best_codec() -> str:
+    """Strongest general-purpose codec usable here: zstd if present, else gzip."""
+    return CODEC_ZSTD if have_codec(CODEC_ZSTD) else CODEC_GZIP
+
+
+def compress(buf, codec: str) -> bytes:
     if codec == CODEC_NONE:
         return buf
     if codec == CODEC_GZIP:
         return zlib.compress(buf, 6)
     if codec == CODEC_ZSTD:
-        if _zstd is None:  # pragma: no cover
-            raise RuntimeError("zstandard not available")
+        if _zstd is None:
+            raise CodecUnavailable(
+                "codec 'zstd' requires the 'zstandard' package (not installed); "
+                "use codec='gzip' or codec='none' instead"
+            )
         return _zstd.ZstdCompressor(level=3).compress(buf)
     raise ValueError(f"unknown codec {codec!r}")
 
 
-def decompress(buf: bytes, codec: str) -> bytes:
+def decompress(buf, codec: str):
     if codec == CODEC_NONE:
         return buf
     if codec == CODEC_GZIP:
         return zlib.decompress(buf)
     if codec == CODEC_ZSTD:
-        if _zstd is None:  # pragma: no cover
-            raise RuntimeError("zstandard not available")
+        if _zstd is None:
+            raise CodecUnavailable(
+                "codec 'zstd' requires the 'zstandard' package (not installed); "
+                "this file cannot be decoded until it is available"
+            )
         return _zstd.ZstdDecompressor().decompress(buf)
     raise ValueError(f"unknown codec {codec!r}")
 
@@ -97,13 +125,59 @@ def encode_page(values: np.ndarray, encoding: str, codec: str) -> tuple[bytes, d
     return out, stats
 
 
-def decode_page(buf: bytes, meta: PageMeta, dtype, codec: str) -> np.ndarray:
+def decode_page(
+    buf, meta: PageMeta, dtype, codec: str, out: np.ndarray | None = None
+) -> np.ndarray:
+    """Decode one page; ``buf`` may be any bytes-like (memoryview slice).
+
+    ``out``, if given, receives the decoded values in place (must be a
+    contiguous 1-D array of ``meta.count`` elements) — the coalesced reader
+    uses this to decode straight into preallocated column arrays.
+    """
     payload = decompress(buf, codec)
     if meta.encoding == ENC_FP_DELTA:
-        return fp_delta_decode(payload, meta.count, dtype)
+        return fp_delta_decode(payload, meta.count, dtype, out=out)
     if meta.encoding == ENC_RAW:
-        return np.frombuffer(payload, dtype=dtype, count=meta.count).copy()
+        vals = np.frombuffer(payload, dtype=dtype, count=meta.count)
+        if out is not None:
+            out[:] = vals
+            return out
+        return vals.copy()
     raise ValueError(f"unknown encoding {meta.encoding!r}")
+
+
+def encode_pages(
+    values: np.ndarray, bounds: list[tuple[int, int]], encoding: str, codec: str
+) -> list[tuple[bytes, dict]]:
+    """Batch-encode value ranges ``[v0, v1)`` of one column as pages.
+
+    For FP-delta this shares a single column-wide delta/zigzag/bit-count pass
+    across all pages (byte-identical to per-page :func:`encode_page`); raw
+    pages are plain slices. Compression still applies per page.
+    """
+    values = np.ascontiguousarray(values)
+    out: list[tuple[bytes, dict]] = []
+    if encoding == ENC_FP_DELTA:
+        encoded = fp_delta_encode_pages(values, bounds)
+        for (payload, st), (v0, v1) in zip(encoded, bounds):
+            comp = compress(payload, codec)
+            out.append((comp, {
+                "n_bits": st.n_bits, "n_resets": st.n_resets,
+                "raw_nbytes": values[v0:v1].nbytes,
+                "encoded_nbytes": len(payload), "stored_nbytes": len(comp),
+            }))
+        return out
+    if encoding == ENC_RAW:
+        for v0, v1 in bounds:
+            payload = values[v0:v1].tobytes()
+            comp = compress(payload, codec)
+            out.append((comp, {
+                "n_bits": 0, "n_resets": 0,
+                "raw_nbytes": values[v0:v1].nbytes,
+                "encoded_nbytes": len(payload), "stored_nbytes": len(comp),
+            }))
+        return out
+    raise ValueError(f"unknown encoding {encoding!r}")
 
 
 def plan_page_splits(

@@ -52,17 +52,24 @@ def _bits_needed(values: np.ndarray) -> int:
 
 
 def encode_levels(values: np.ndarray) -> bytes:
-    """Level stream encoder: min(RLE, bit-packed) with a mode tag."""
+    """Level stream encoder: min(RLE, bit-packed) with a mode tag.
+
+    Both encodings have exactly predictable sizes (RLE: 4 + 5*runs bytes;
+    packed: 5 + ceil(width*n/8) bytes), so the winner is chosen analytically
+    and only that encoding is materialized — the loser is never built.
+    """
     values = np.ascontiguousarray(values, dtype=np.uint8)
-    rle = rle_encode(values)
+    n = len(values)
+    n_runs = 1 + int(np.count_nonzero(values[1:] != values[:-1])) if n else 0
+    rle_size = 4 + 5 * n_runs
     width = _bits_needed(values)
+    packed_size = 5 + (width * n + 7) // 8
+    if rle_size <= packed_size:
+        return bytes([MODE_RLE]) + rle_encode(values)
     words, total = pack_tokens(
-        values.astype(np.uint64), np.full(len(values), width, dtype=np.int64)
+        values.astype(np.uint64), np.full(n, width, dtype=np.int64)
     )
-    packed = struct.pack("<BI", width, len(values)) + words_to_bytes(words, total)
-    if len(rle) <= len(packed):
-        return bytes([MODE_RLE]) + rle
-    return bytes([MODE_PACKED]) + packed
+    return bytes([MODE_PACKED]) + struct.pack("<BI", width, n) + words_to_bytes(words, total)
 
 
 def decode_levels(buf: bytes) -> np.ndarray:

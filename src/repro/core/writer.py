@@ -24,7 +24,7 @@ import msgpack
 import numpy as np
 
 from .columnar import GeometryColumns, from_ragged, shred
-from .pages import PageMeta, compress, encode_page, plan_page_splits
+from .pages import PageMeta, compress, encode_pages, plan_page_splits
 from .rle import encode_levels, rle_encode
 from .sfc import sort_keys
 
@@ -242,15 +242,17 @@ class SpatialParquetWriter:
             off, nb = self._write_blob(comp)
             rg[name] = {"offset": off, "nbytes": nb, "raw_nbytes": len(buf)}
         # coordinate pages (x and y share record-aligned boundaries => bbox/page)
+        # batch-encoded: one delta/zigzag/bit-count pass per axis feeds every
+        # page's n* optimizer and token emitter (see fp_delta_encode_pages)
         starts = cols.record_value_starts()
         splits = plan_page_splits(starts, cols.n_values, self.page_values)
         bounds = np.append(starts, cols.n_values)
+        vbounds = [(int(bounds[r0]), int(bounds[r1])) for r0, r1 in splits]
         for axis, values in (("x", cols.x), ("y", cols.y)):
             pages = []
-            for r0, r1 in splits:
-                v0, v1 = int(bounds[r0]), int(bounds[r1])
+            encoded = encode_pages(values, vbounds, self.encoding, self.codec)
+            for (buf, st), (r0, r1), (v0, v1) in zip(encoded, splits, vbounds):
                 chunk = values[v0:v1]
-                buf, st = encode_page(chunk, self.encoding, self.codec)
                 off, nb = self._write_blob(buf)
                 pages.append(
                     PageMeta(
@@ -267,10 +269,10 @@ class SpatialParquetWriter:
         rg["extra"] = {}
         for k, v in extras.items():
             pages = []
-            for r0, r1 in splits:
+            enc = self.encoding if v.dtype.itemsize in (4, 8) else "raw"
+            encoded = encode_pages(v, [(r0, r1) for r0, r1 in splits], enc, self.codec)
+            for (buf, st), (r0, r1) in zip(encoded, splits):
                 chunk = v[r0:r1]
-                enc = self.encoding if chunk.dtype.itemsize in (4, 8) else "raw"
-                buf, st = encode_page(chunk, enc, self.codec)
                 off, nb = self._write_blob(buf)
                 pages.append(
                     PageMeta(

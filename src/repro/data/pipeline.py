@@ -44,7 +44,11 @@ class TrajectoryBatcher:
             order = self.rng.permutation(len(self.files))
             for fi in order:
                 with SpatialParquetReader(self.files[fi]) as r:
-                    cols, _, _ = r.read_columnar(bbox=self.bbox, refine=True)
+                    # project to geometry only: skips decoding (and reading)
+                    # every extra column the tokenizer never looks at
+                    cols, _, _ = r.read_columnar(
+                        bbox=self.bbox, refine=True, columns=("geometry",)
+                    )
                     if cols is None or cols.n_records == 0:
                         continue
                     mat = self.tok.encode_trajectories(cols, self.seq_len)

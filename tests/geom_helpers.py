@@ -1,0 +1,50 @@
+"""Shared random-geometry builders for tests (no hypothesis dependency).
+
+Lives outside the test modules so suites that don't use property testing
+(test_file_format, test_read_path, ...) can import these without pulling in
+the optional ``hypothesis`` wheel.
+"""
+
+import numpy as np
+
+from repro.core.geometry import Geometry, signed_area
+
+
+def _coords(rng, n):
+    return np.round(rng.normal(0, 10, (n, 2)), 6)
+
+
+def _ring(rng, n=5, cw=True):
+    ang = np.sort(rng.uniform(0, 2 * np.pi, n))
+    pts = np.stack([np.cos(ang), np.sin(ang)], 1) * rng.uniform(0.5, 3.0)
+    pts = pts + rng.uniform(-50, 50, 2)
+    ring = np.vstack([pts, pts[:1]])
+    return ring[::-1].copy() if cw == (signed_area(ring) > 0) else ring
+
+
+def random_geometry(rng, allow_collection=True) -> Geometry:
+    kind = rng.integers(0, 8 if allow_collection else 7)
+    if kind == 0:
+        return Geometry.empty()
+    if kind == 1:
+        return Geometry.point(*_coords(rng, 1)[0])
+    if kind == 2:
+        return Geometry.linestring(_coords(rng, rng.integers(2, 8)))
+    if kind == 3:
+        holes = [_ring(rng, 4) * 0.1 for _ in range(rng.integers(0, 3))]
+        return Geometry.polygon(_ring(rng, rng.integers(4, 8)), holes)
+    if kind == 4:
+        return Geometry.multipoint(_coords(rng, rng.integers(1, 6)))
+    if kind == 5:
+        return Geometry.multilinestring(
+            [_coords(rng, rng.integers(2, 6)) for _ in range(rng.integers(1, 4))]
+        )
+    if kind == 6:
+        polys = []
+        for _ in range(rng.integers(1, 4)):
+            holes = [_ring(rng, 4) * 0.1 for _ in range(rng.integers(0, 2))]
+            polys.append((_ring(rng, rng.integers(4, 7)), holes))
+        return Geometry.multipolygon(polys)
+    return Geometry.collection(
+        [random_geometry(rng, allow_collection=True) for _ in range(rng.integers(1, 4))]
+    )

@@ -14,7 +14,7 @@ from repro.core.geometry import TYPE_MULTILINESTRING, TYPE_MULTIPOLYGON, Geometr
 from repro.core.writer import write_file
 from repro.data.synthetic import porto_taxi_like
 from repro.core.columnar import assemble
-from tests.test_geometry_columnar import random_geometry
+from tests.geom_helpers import random_geometry
 
 
 def test_wkb_roundtrip_random(rng):

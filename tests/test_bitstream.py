@@ -1,22 +1,41 @@
-"""Bit-stream pack/unpack invariants."""
+"""Bit-stream pack/unpack invariants.
+
+``hypothesis`` is optional: without it, the property tests run fixed
+deterministic samples (seeded numpy rng) instead of being skipped.
+"""
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
 
 from repro.core.bitstream import (
     bytes_to_words,
+    marker_candidates,
     pack_tokens,
     read_one,
+    unpack_at,
     unpack_fixed,
     width_mask,
     words_to_bytes,
 )
 
+try:
+    from hypothesis import given, settings, strategies as hyp_st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - optional wheel
+    HAVE_HYPOTHESIS = False
 
-@given(st.lists(st.tuples(st.integers(0, 2**64 - 1), st.integers(1, 64)),
-                min_size=0, max_size=200))
-@settings(max_examples=200, deadline=None)
-def test_pack_then_sequential_read(tokens):
+_SEEDS = [0, 1, 7, 42, 1234]
+
+
+def _random_tokens(seed, max_size=200):
+    rng = np.random.default_rng(seed)
+    k = int(rng.integers(0, max_size + 1))
+    vals = rng.integers(0, 2**63, k, dtype=np.uint64) * 2 + rng.integers(0, 2, k).astype(np.uint64)
+    widths = rng.integers(1, 65, k)
+    return [(int(v), int(w)) for v, w in zip(vals, widths)]
+
+
+def _check_pack_then_sequential_read(tokens):
     vals = np.array([t[0] for t in tokens], np.uint64)
     widths = np.array([t[1] for t in tokens], np.int64)
     words, total = pack_tokens(vals, widths)
@@ -28,19 +47,14 @@ def test_pack_then_sequential_read(tokens):
         off += w
 
 
-@given(st.integers(1, 64), st.lists(st.integers(0, 2**64 - 1), min_size=1, max_size=300))
-@settings(max_examples=100, deadline=None)
-def test_fixed_width_vector_roundtrip(width, vals):
+def _check_fixed_width_vector_roundtrip(width, vals):
     vals = np.array(vals, np.uint64) & width_mask(width)
     words, total = pack_tokens(vals, np.full(len(vals), width, np.int64))
     got = unpack_fixed(words, 0, len(vals), width)
     assert np.array_equal(got, vals)
 
 
-@given(st.lists(st.tuples(st.integers(0, 2**64 - 1), st.integers(1, 64)),
-                min_size=1, max_size=100))
-@settings(max_examples=100, deadline=None)
-def test_bytes_serialization_roundtrip(tokens):
+def _check_bytes_serialization_roundtrip(tokens):
     vals = np.array([t[0] for t in tokens], np.uint64)
     widths = np.array([t[1] for t in tokens], np.int64)
     words, total = pack_tokens(vals, widths)
@@ -53,6 +67,44 @@ def test_bytes_serialization_roundtrip(tokens):
         off += w
 
 
+if HAVE_HYPOTHESIS:
+    @given(hyp_st.lists(hyp_st.tuples(hyp_st.integers(0, 2**64 - 1), hyp_st.integers(1, 64)),
+                        min_size=0, max_size=200))
+    @settings(max_examples=200, deadline=None)
+    def test_pack_then_sequential_read(tokens):
+        _check_pack_then_sequential_read(tokens)
+
+    @given(hyp_st.integers(1, 64),
+           hyp_st.lists(hyp_st.integers(0, 2**64 - 1), min_size=1, max_size=300))
+    @settings(max_examples=100, deadline=None)
+    def test_fixed_width_vector_roundtrip(width, vals):
+        _check_fixed_width_vector_roundtrip(width, vals)
+
+    @given(hyp_st.lists(hyp_st.tuples(hyp_st.integers(0, 2**64 - 1), hyp_st.integers(1, 64)),
+                        min_size=1, max_size=100))
+    @settings(max_examples=100, deadline=None)
+    def test_bytes_serialization_roundtrip(tokens):
+        _check_bytes_serialization_roundtrip(tokens)
+else:
+    @pytest.mark.parametrize("seed", _SEEDS)
+    def test_pack_then_sequential_read(seed):
+        _check_pack_then_sequential_read(_random_tokens(seed))
+
+    @pytest.mark.parametrize("seed", _SEEDS)
+    def test_fixed_width_vector_roundtrip(seed):
+        rng = np.random.default_rng(seed)
+        for width in (1, 2, 7, 31, 32, 33, 63, 64):
+            vals = rng.integers(0, 2**63, 300, dtype=np.uint64) * 2 + 1
+            _check_fixed_width_vector_roundtrip(width, list(vals))
+
+    @pytest.mark.parametrize("seed", _SEEDS)
+    def test_bytes_serialization_roundtrip(seed):
+        toks = _random_tokens(seed)
+        if not toks:
+            toks = [(5, 8)]
+        _check_bytes_serialization_roundtrip(toks)
+
+
 def test_mixed_stream_alignment():
     # header(8) + raw(64) + many 7-bit values (the fp-delta layout)
     vals = [5, 0xDEADBEEFCAFEF00D] + list(range(100))
@@ -62,3 +114,36 @@ def test_mixed_stream_alignment():
     assert read_one(words, 8, 64) == 0xDEADBEEFCAFEF00D
     got = unpack_fixed(words, 72, 100, 7)
     assert np.array_equal(got, np.arange(100, dtype=np.uint64))
+
+
+def test_unpack_at_arbitrary_offsets(rng):
+    vals = rng.integers(0, 2**64, 500, dtype=np.uint64)
+    widths = rng.integers(1, 65, 500)
+    words, total = pack_tokens(vals, widths)
+    offs = np.cumsum(widths) - widths
+    # gather every token individually at its exact (unsorted) offset
+    perm = rng.permutation(500)
+    for w in np.unique(widths):
+        sel = perm[widths[perm] == w]
+        got = unpack_at(words, offs[sel], int(w))
+        assert np.array_equal(got, vals[sel] & width_mask(int(w)))
+
+
+@pytest.mark.parametrize("n", [1, 2, 3, 7, 17, 33, 64])
+def test_marker_candidates_exact(n):
+    # build a stream with known runs of ones at known bit positions
+    rng = np.random.default_rng(n)
+    total_bits = 4096
+    bits = np.zeros(total_bits, dtype=np.uint8)
+    planted = sorted(rng.choice(total_bits - 2 * n, 8, replace=False).tolist())
+    for p in planted:
+        bits[p : p + n] = 1
+    words = np.zeros(total_bits // 64 + 1, dtype=np.uint64)
+    packed = np.packbits(bits, bitorder="little")
+    words[: len(packed) // 8] = packed.view("<u8")
+    got = set(marker_candidates(words, n).tolist())
+    # brute force: every position where n consecutive ones start
+    want = {
+        i for i in range(total_bits - n + 1) if bits[i : i + n].all()
+    }
+    assert got == want

@@ -1,0 +1,158 @@
+"""Adversarial FP-delta round-trips and codec guard-rails (no hypothesis).
+
+Exercises every escape-resolution path of the vectorized decoder: the
+no-escape fast path, the sparse fixpoint, the dense candidate scan, and the
+``out=`` in-place contract used by the coalesced reader.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.fp_delta import (
+    fp_delta_decode,
+    fp_delta_encode,
+    fp_delta_encode_pages,
+    unzigzag,
+)
+from repro.core.pages import (
+    CodecUnavailable,
+    PageMeta,
+    decode_page,
+    encode_page,
+    have_codec,
+)
+
+
+def _ibits(x):
+    return x.view(np.int64 if x.dtype.itemsize == 8 else np.int32)
+
+
+def roundtrip(x, n_bits=None):
+    payload, st_ = fp_delta_encode(x, n_bits=n_bits)
+    y = fp_delta_decode(payload, len(x), x.dtype)
+    assert np.array_equal(_ibits(x), _ibits(y)), "roundtrip not bit-exact"
+    # the out= path must produce the identical bits in the caller's buffer
+    out = np.empty(len(x), dtype=x.dtype)
+    y2 = fp_delta_decode(payload, len(x), x.dtype, out=out)
+    assert y2 is out
+    assert np.array_equal(_ibits(x), _ibits(out)), "out= decode not bit-exact"
+    return st_
+
+
+# ------------------------------------------------------- escape-marker edges
+@pytest.mark.parametrize("n", [1, 2, 5, 13, 31, 63])
+def test_value_equal_to_marker_escapes(n):
+    # a delta whose zigzag is exactly the all-ones marker must escape
+    marker_delta = unzigzag(np.array([(1 << n) - 1], np.uint64), 64)[0]
+    base = np.int64(1000)
+    x = np.array([base, base + marker_delta, base, base + marker_delta], np.int64)
+    st_ = roundtrip(x, n_bits=n)
+    assert st_.n_resets >= 2
+
+
+@pytest.mark.parametrize("width,dtype", [(64, np.int64), (32, np.int32)])
+def test_n_equals_width_minus_one(width, dtype, rng):
+    x = rng.integers(-(2 ** (width - 2)), 2 ** (width - 2), 500).astype(dtype)
+    roundtrip(x, n_bits=width - 1)
+
+
+def test_single_value():
+    for v in (3.14, -0.0, np.nan, np.inf):
+        x = np.array([v], np.float64)
+        p, st_ = fp_delta_encode(x)
+        y = fp_delta_decode(p, 1, np.float64)
+        assert np.array_equal(_ibits(x), _ibits(y))
+        assert st_.n_bits == 0  # a lone value always stores raw
+
+
+def test_nan_inf_coordinates(rng):
+    x = rng.normal(0, 1, 64)
+    x[::7] = np.nan
+    x[3::11] = np.inf
+    x[5::13] = -np.inf
+    x[8] = -0.0
+    roundtrip(x)
+
+
+def test_empty_page():
+    p, st_ = fp_delta_encode(np.zeros(0, np.float64))
+    assert p == b"" and st_.n_values == 0
+    assert len(fp_delta_decode(p, 0, np.float64)) == 0
+
+
+@pytest.mark.parametrize("n_bits", [1, 2, 3])
+def test_reset_dense_streams(n_bits, rng):
+    # forcing a tiny n makes nearly every delta escape: the dense candidate
+    # scan must still resolve every marker exactly
+    x = rng.integers(-10**9, 10**9, 4000).astype(np.int64)
+    st_ = roundtrip(x, n_bits=n_bits)
+    assert st_.n_resets > 0.9 * (len(x) - 1)
+
+
+def test_alternating_dense_sparse_segments(rng):
+    # long smooth runs interrupted by jumps: mixes inline runs and escapes
+    parts = []
+    for i in range(20):
+        base = rng.integers(-2**60, 2**60)
+        parts.append(base + np.arange(200, dtype=np.int64) * (i + 1))
+    x = np.concatenate(parts)
+    st_ = roundtrip(x)
+    assert st_.n_resets >= 19  # at least one escape per jump
+
+
+def test_escape_raw_value_full_of_ones(rng):
+    # raw escape values that are nearly all 1-bits try to fool the marker
+    # scanner with fake candidate runs straddling the raw region
+    x = np.array([0, -1, 0, -1, 2**40, -1, -2], np.int64)
+    for n in (3, 7, 15):
+        roundtrip(x, n_bits=n)
+
+
+def test_float32_roundtrip_with_escapes(rng):
+    x = np.cumsum(rng.normal(0, 1e-3, 10_000)).astype(np.float32)
+    x[::97] = rng.normal(0, 1e30, len(x[::97])).astype(np.float32)
+    roundtrip(x)
+
+
+def test_out_must_match_shape_and_dtype():
+    p, _ = fp_delta_encode(np.arange(8, dtype=np.float64))
+    with pytest.raises(ValueError):
+        fp_delta_decode(p, 8, np.float64, out=np.empty(7, np.float64))
+    with pytest.raises(ValueError):
+        fp_delta_decode(p, 8, np.float64, out=np.empty(8, np.float32))
+    with pytest.raises(ValueError):
+        fp_delta_decode(p, 8, np.float64, out=np.empty(16, np.float64)[::2])
+
+
+def test_decode_into_slice_of_larger_buffer(rng):
+    x = np.round(np.cumsum(rng.normal(0, 1e-4, 1000)), 6)
+    p, _ = fp_delta_encode(x)
+    big = np.zeros(3000, np.float64)
+    fp_delta_decode(p, 1000, np.float64, out=big[1000:2000])
+    assert np.array_equal(big[1000:2000], x)
+    assert (big[:1000] == 0).all() and (big[2000:] == 0).all()
+
+
+def test_batch_encode_matches_per_page(rng):
+    x = np.round(np.cumsum(rng.normal(0, 1e-4, 20_000)) - 8.6, 6)
+    bounds = [(0, 1), (1, 5000), (5000, 5000), (5000, 13117), (13117, 20_000)]
+    for (bp, bst), (v0, v1) in zip(fp_delta_encode_pages(x, bounds), bounds):
+        sp, sst = fp_delta_encode(x[v0:v1])
+        assert bp == sp and bst == sst, (v0, v1)
+
+
+# --------------------------------------------------------------- codec guard
+def test_unknown_codec_rejected():
+    with pytest.raises(ValueError):
+        encode_page(np.arange(4.0), "fp_delta", "lz77")
+
+
+def test_codec_unavailable_is_clear():
+    if have_codec("zstd"):
+        pytest.skip("zstandard installed; unavailability path not reachable")
+    with pytest.raises(CodecUnavailable):
+        encode_page(np.arange(4.0), "fp_delta", "zstd")
+    meta = PageMeta(offset=0, nbytes=4, count=4, rec_start=0, rec_count=4,
+                    vmin=0.0, vmax=3.0, encoding="raw", n_bits=0, n_resets=0)
+    with pytest.raises(CodecUnavailable):
+        decode_page(b"\x00" * 4, meta, np.float64, "zstd")

@@ -15,6 +15,7 @@ from repro.data.synthetic import (
     roads_like,
 )
 from repro.data.tokenizer import BOS, EOS, PAD, GeoTokenizer
+from repro.core.pages import best_codec
 
 
 def test_tokenizer_cell_roundtrip(rng):
@@ -52,7 +53,7 @@ def test_synthetic_generators_shapes():
 def test_trajectory_batcher_end_to_end(tmp_path, rng):
     cols = porto_taxi_like(n_traj=300, seed=1)
     p = os.path.join(tmp_path, "a.spqf")
-    write_file(p, columns=cols, sort="hilbert", codec="zstd")
+    write_file(p, columns=cols, sort="hilbert", codec=best_codec())
     tok = GeoTokenizer(PORTO_BBOX, order=6)
     it = iter(TrajectoryBatcher([p], tok, seq_len=96, global_batch=8, accum=2))
     batch = next(it)

@@ -137,8 +137,8 @@ def test_param_specs_all_archs_production_mesh():
         from repro.models.model import build_model
         from repro.sharding.specs import param_specs
 
-        mesh = jax.make_mesh((16, 16), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch.mesh import _mk_mesh
+        mesh = _mk_mesh((16, 16), ("data", "model"))
         for arch in ASSIGNED:
             cfg = get_config(arch)
             model = build_model(cfg)

@@ -1,8 +1,13 @@
-"""FP-delta codec: paper Algorithms 1-3. Property tests via hypothesis."""
+"""FP-delta codec: paper Algorithms 1-3. Property tests via hypothesis.
+
+``hypothesis`` is optional: without it, the property tests run fixed
+deterministic samples (seeded numpy rng) instead of being skipped. The
+structured/adversarial edge cases live in test_codec_edge.py and never
+needed hypothesis.
+"""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core.fp_delta import (
     compute_best_delta_bits,
@@ -14,6 +19,14 @@ from repro.core.fp_delta import (
     unzigzag,
     zigzag,
 )
+
+try:
+    from hypothesis import given, settings, strategies as hyp_st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - optional wheel
+    HAVE_HYPOTHESIS = False
+
+_SEEDS = [0, 1, 7, 42, 1234]
 
 
 def _ibits(x):
@@ -27,54 +40,105 @@ def roundtrip(x, n_bits=None):
     return st_
 
 
-# ------------------------------------------------------------------ property
-@given(st.lists(st.floats(allow_nan=True, allow_infinity=True, width=64),
-                min_size=0, max_size=300))
-@settings(max_examples=200, deadline=None)
-def test_roundtrip_arbitrary_f64(vals):
-    roundtrip(np.array(vals, dtype=np.float64))
+def _random_floats(seed, dtype, max_size=300):
+    """Mix of smooth, jumpy, and special-value floats (NaN/Inf included)."""
+    rng = np.random.default_rng(seed)
+    k = int(rng.integers(0, max_size + 1))
+    smooth = np.cumsum(rng.normal(0, 1e-4, k))
+    if np.dtype(dtype) == np.float32:  # keep wild values f32-representable
+        with np.errstate(invalid="ignore"):  # signalling-NaN casts warn
+            wild = rng.integers(0, 2**32, k, dtype=np.uint32).view(np.float32).astype(np.float64)
+    else:
+        wild = rng.integers(0, 2**64, k, dtype=np.uint64).view(np.float64)
+    pick = rng.integers(0, 4, k)
+    out = np.where(pick == 0, wild, smooth)
+    out[pick == 2] = np.nan
+    out[pick == 3] = np.inf * rng.choice([-1.0, 1.0], int((pick == 3).sum()))
+    return out.astype(dtype)
 
 
-@given(st.lists(st.floats(allow_nan=True, allow_infinity=True, width=32),
-                min_size=0, max_size=300))
-@settings(max_examples=100, deadline=None)
-def test_roundtrip_arbitrary_f32(vals):
-    roundtrip(np.array(vals, dtype=np.float32))
-
-
-@given(st.lists(st.integers(-2**63, 2**63 - 1), min_size=1, max_size=200),
-       st.integers(1, 63))
-@settings(max_examples=100, deadline=None)
-def test_roundtrip_forced_width_i64(vals, n):
-    roundtrip(np.array(vals, dtype=np.int64), n_bits=n)
-
-
-@given(st.integers(-2**63, 2**63 - 1))
-def test_zigzag_involution(v):
-    z = zigzag(np.array([v], np.int64), 64)
-    assert unzigzag(z, 64)[0] == v
-    # zigzag maps small magnitudes to small unsigned values
-    if -(2**30) < v < 2**30:
-        assert int(z[0]) <= 2 * abs(v)
-
-
-@given(st.lists(st.floats(allow_nan=False, allow_infinity=False, width=64),
-                min_size=2, max_size=300))
-@settings(max_examples=100, deadline=None)
-def test_nstar_is_optimal(vals):
-    x = np.array(vals, dtype=np.float64)
+def _check_nstar_is_optimal(x):
     nstar = compute_best_delta_bits(x)
     sizes = {n: encoded_size_bits(x, n) for n in range(0, 64)}
     assert sizes[nstar] == min(sizes.values())
 
 
-@given(st.lists(st.floats(allow_nan=False, allow_infinity=False, width=64),
-                min_size=2, max_size=200))
-@settings(max_examples=50, deadline=None)
-def test_histogram_totals(vals):
-    x = np.array(vals, dtype=np.float64)
-    h = delta_bit_histogram(x)
-    assert h.sum() == len(x) - 1  # paper: sum h = |X| - 1
+if HAVE_HYPOTHESIS:
+    @given(hyp_st.lists(hyp_st.floats(allow_nan=True, allow_infinity=True, width=64),
+                        min_size=0, max_size=300))
+    @settings(max_examples=200, deadline=None)
+    def test_roundtrip_arbitrary_f64(vals):
+        roundtrip(np.array(vals, dtype=np.float64))
+
+    @given(hyp_st.lists(hyp_st.floats(allow_nan=True, allow_infinity=True, width=32),
+                        min_size=0, max_size=300))
+    @settings(max_examples=100, deadline=None)
+    def test_roundtrip_arbitrary_f32(vals):
+        roundtrip(np.array(vals, dtype=np.float32))
+
+    @given(hyp_st.lists(hyp_st.integers(-2**63, 2**63 - 1), min_size=1, max_size=200),
+           hyp_st.integers(1, 63))
+    @settings(max_examples=100, deadline=None)
+    def test_roundtrip_forced_width_i64(vals, n):
+        roundtrip(np.array(vals, dtype=np.int64), n_bits=n)
+
+    @given(hyp_st.integers(-2**63, 2**63 - 1))
+    def test_zigzag_involution(v):
+        z = zigzag(np.array([v], np.int64), 64)
+        assert unzigzag(z, 64)[0] == v
+        # zigzag maps small magnitudes to small unsigned values
+        if -(2**30) < v < 2**30:
+            assert int(z[0]) <= 2 * abs(v)
+
+    @given(hyp_st.lists(hyp_st.floats(allow_nan=False, allow_infinity=False, width=64),
+                        min_size=2, max_size=300))
+    @settings(max_examples=100, deadline=None)
+    def test_nstar_is_optimal(vals):
+        _check_nstar_is_optimal(np.array(vals, dtype=np.float64))
+
+    @given(hyp_st.lists(hyp_st.floats(allow_nan=False, allow_infinity=False, width=64),
+                        min_size=2, max_size=200))
+    @settings(max_examples=50, deadline=None)
+    def test_histogram_totals(vals):
+        x = np.array(vals, dtype=np.float64)
+        h = delta_bit_histogram(x)
+        assert h.sum() == len(x) - 1  # paper: sum h = |X| - 1
+else:
+    @pytest.mark.parametrize("seed", _SEEDS)
+    def test_roundtrip_arbitrary_f64(seed):
+        roundtrip(_random_floats(seed, np.float64))
+
+    @pytest.mark.parametrize("seed", _SEEDS)
+    def test_roundtrip_arbitrary_f32(seed):
+        roundtrip(_random_floats(seed, np.float32))
+
+    @pytest.mark.parametrize("seed", _SEEDS)
+    def test_roundtrip_forced_width_i64(seed):
+        rng = np.random.default_rng(seed)
+        vals = rng.integers(-2**63, 2**63 - 1, 200, dtype=np.int64)
+        for n in (1, 2, 7, 21, 40, 63):
+            roundtrip(vals, n_bits=n)
+
+    def test_zigzag_involution():
+        vals = np.concatenate([
+            np.array([0, 1, -1, 2**62, -(2**62), 2**63 - 1, -(2**63)], np.int64),
+            np.random.default_rng(0).integers(-2**63, 2**63 - 1, 500, dtype=np.int64),
+        ])
+        z = zigzag(vals, 64)
+        assert np.array_equal(unzigzag(z, 64), vals)
+        small = vals[np.abs(vals) < 2**30]
+        assert (zigzag(small, 64).astype(np.int64) <= 2 * np.abs(small)).all()
+
+    @pytest.mark.parametrize("seed", _SEEDS)
+    def test_nstar_is_optimal(seed):
+        rng = np.random.default_rng(seed)
+        _check_nstar_is_optimal(np.cumsum(rng.normal(0, 10.0 ** rng.integers(-9, 3), 300)))
+
+    @pytest.mark.parametrize("seed", _SEEDS)
+    def test_histogram_totals(seed):
+        x = np.random.default_rng(seed).normal(0, 1, 200)
+        h = delta_bit_histogram(x)
+        assert h.sum() == len(x) - 1  # paper: sum h = |X| - 1
 
 
 # ---------------------------------------------------------------- structured

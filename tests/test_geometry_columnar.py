@@ -1,69 +1,42 @@
-"""Geometry shredding (paper §2): shred∘assemble == id on random geometries."""
+"""Geometry shredding (paper §2): shred∘assemble == id on random geometries.
+
+``hypothesis`` is optional: when missing, the property test runs a fixed
+deterministic sample instead of being skipped.
+"""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core.columnar import assemble, from_ragged, multipolygon_polygons, shred
-from repro.core.geometry import (
-    TYPE_MULTIPOINT,
-    Geometry,
-    is_cw,
-    polygons_from_rings,
-    signed_area,
-)
+from repro.core.geometry import TYPE_MULTIPOINT, Geometry, is_cw, polygons_from_rings
 from repro.core.writer import concat_columns, permute_records, record_centroids
+from tests.geom_helpers import _coords, _ring, random_geometry
+
+try:
+    from hypothesis import given, settings, strategies as hyp_st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - optional wheel
+    HAVE_HYPOTHESIS = False
 
 
-def _coords(rng, n):
-    return np.round(rng.normal(0, 10, (n, 2)), 6)
-
-
-def _ring(rng, n=5, cw=True):
-    ang = np.sort(rng.uniform(0, 2 * np.pi, n))
-    pts = np.stack([np.cos(ang), np.sin(ang)], 1) * rng.uniform(0.5, 3.0)
-    pts = pts + rng.uniform(-50, 50, 2)
-    ring = np.vstack([pts, pts[:1]])
-    return ring[::-1].copy() if cw == (signed_area(ring) > 0) else ring
-
-
-def random_geometry(rng, allow_collection=True) -> Geometry:
-    kind = rng.integers(0, 8 if allow_collection else 7)
-    if kind == 0:
-        return Geometry.empty()
-    if kind == 1:
-        return Geometry.point(*_coords(rng, 1)[0])
-    if kind == 2:
-        return Geometry.linestring(_coords(rng, rng.integers(2, 8)))
-    if kind == 3:
-        holes = [_ring(rng, 4) * 0.1 for _ in range(rng.integers(0, 3))]
-        return Geometry.polygon(_ring(rng, rng.integers(4, 8)), holes)
-    if kind == 4:
-        return Geometry.multipoint(_coords(rng, rng.integers(1, 6)))
-    if kind == 5:
-        return Geometry.multilinestring(
-            [_coords(rng, rng.integers(2, 6)) for _ in range(rng.integers(1, 4))]
-        )
-    if kind == 6:
-        polys = []
-        for _ in range(rng.integers(1, 4)):
-            holes = [_ring(rng, 4) * 0.1 for _ in range(rng.integers(0, 2))]
-            polys.append((_ring(rng, rng.integers(4, 7)), holes))
-        return Geometry.multipolygon(polys)
-    return Geometry.collection(
-        [random_geometry(rng, allow_collection=True) for _ in range(rng.integers(1, 4))]
-    )
-
-
-@given(st.integers(0, 10_000), st.integers(1, 40))
-@settings(max_examples=60, deadline=None)
-def test_shred_assemble_roundtrip(seed, n):
+def _check_shred_roundtrip(seed, n):
     rng = np.random.default_rng(seed)
     geoms = [random_geometry(rng) for _ in range(n)]
     cols = shred(geoms)
     assert cols.n_records == n
     back = assemble(cols)
     assert back == geoms
+
+
+if HAVE_HYPOTHESIS:
+    @given(hyp_st.integers(0, 10_000), hyp_st.integers(1, 40))
+    @settings(max_examples=60, deadline=None)
+    def test_shred_assemble_roundtrip(seed, n):
+        _check_shred_roundtrip(seed, n)
+else:
+    @pytest.mark.parametrize("seed,n", [(0, 1), (1, 7), (17, 40), (123, 25), (999, 13)])
+    def test_shred_assemble_roundtrip(seed, n):
+        _check_shred_roundtrip(seed, n)
 
 
 def test_multipolygon_winding_reconstruction(rng):

@@ -1,0 +1,205 @@
+"""Coalesced-I/O read path: equivalence, syscall budget, stats accounting."""
+
+import os
+import tempfile
+
+import numpy as np
+import pytest
+
+from repro.core.columnar import from_ragged
+from repro.core.reader import SpatialParquetReader
+from repro.core.writer import write_file
+from tests.geom_helpers import random_geometry
+
+
+def _point_cols(rng, n, spread=100.0):
+    pts = np.round(rng.uniform(-spread, spread, (n, 2)), 6)
+    return pts, from_ragged(np.ones(n, np.uint8), pts,
+                            np.ones(n, np.int64), np.ones(n, np.int64))
+
+
+def _write_sample(path, rng, n=20_000, **kw):
+    pts, cols = _point_cols(rng, n)
+    ts = rng.integers(0, 1 << 40, n)
+    tag = rng.integers(0, 100, n).astype(np.int32)
+    kw.setdefault("page_values", 1024)
+    kw.setdefault("sort", "hilbert")
+    write_file(path, columns=cols, extra={"ts": ts, "tag": tag},
+               extra_schema={"ts": "<i8", "tag": "<i4"}, **kw)
+    return pts
+
+
+class CountingFile:
+    """File proxy counting data-read syscalls (read/readinto)."""
+
+    def __init__(self, fh):
+        self._fh = fh
+        self.reads = 0
+
+    def read(self, *a):
+        self.reads += 1
+        return self._fh.read(*a)
+
+    def readinto(self, b):
+        self.reads += 1
+        return self._fh.readinto(b)
+
+    def __getattr__(self, name):
+        return getattr(self._fh, name)
+
+
+def _geo_equal(a, b):
+    if a is None or b is None:
+        return a is b
+    return all(
+        np.array_equal(getattr(a, f), getattr(b, f))
+        for f in ("types", "type_rep", "rep", "defn", "x", "y")
+    )
+
+
+@pytest.mark.parametrize("bbox", [None, (-95.0, -95.0, -70.0, -70.0), (200.0, 200.0, 300.0, 300.0)])
+def test_coalesced_matches_per_page(rng, bbox):
+    p = tempfile.mktemp(".spqf")
+    _write_sample(p, rng, row_group_records=6000)
+    with SpatialParquetReader(p) as r:
+        g1, e1, s1 = r.read_columnar(bbox=bbox, coalesce=True)
+        g2, e2, s2 = r.read_columnar(bbox=bbox, coalesce=False)
+    assert _geo_equal(g1, g2)
+    for k in e1:
+        assert np.array_equal(e1[k], e2[k]), k
+    assert s1 == s2
+    os.unlink(p)
+
+
+def test_coalesced_matches_per_page_mixed_geoms(rng):
+    geoms = [random_geometry(np.random.default_rng(s)) for s in range(300)]
+    p = tempfile.mktemp(".spqf")
+    write_file(p, geometries=geoms, row_group_records=100, page_values=64)
+    with SpatialParquetReader(p) as r:
+        g1, _, _ = r.read_columnar(coalesce=True)
+        g2, _, _ = r.read_columnar(coalesce=False)
+        back, _ = r.read()
+    assert _geo_equal(g1, g2)
+    assert back == geoms
+    os.unlink(p)
+
+
+def test_full_scan_is_one_read_per_row_group(rng):
+    p = tempfile.mktemp(".spqf")
+    _write_sample(p, rng, row_group_records=5000)  # 4 row groups
+    with SpatialParquetReader(p) as r:
+        n_groups = len(r.footer["row_groups"])
+        assert n_groups == 4
+        counter = CountingFile(r._fh)
+        r._fh = counter
+        geo, extras, _ = r.read_columnar()
+        assert geo.n_records == 20_000
+        # every row group's blobs are adjacent -> exactly one coalesced read
+        assert counter.reads == n_groups, counter.reads
+    os.unlink(p)
+
+
+def test_pruned_read_syscalls_bounded_by_runs(rng):
+    p = tempfile.mktemp(".spqf")
+    _write_sample(p, rng, row_group_records=1 << 20)
+    bbox = (-95.0, -95.0, -70.0, -70.0)
+    with SpatialParquetReader(p) as r:
+        runs = r.index.page_runs(bbox)
+        assert len(runs) >= 1
+        counter = CountingFile(r._fh)
+        r._fh = counter
+        geo, extras, st = r.read_columnar(bbox=bbox)
+        assert st.pages_read < st.pages_total, "index should prune pages"
+        # one range for the levels + at most 3 per run (x, y, extras merge
+        # when adjacent); coalescing may merge further, never split
+        max_ranges = 1 + 3 * len(runs)
+        assert counter.reads <= max_ranges, (counter.reads, len(runs))
+    os.unlink(p)
+
+
+def test_page_runs_are_consecutive_and_cover_hits(rng):
+    p = tempfile.mktemp(".spqf")
+    _write_sample(p, rng, row_group_records=7000)
+    bbox = (-50.0, -50.0, 20.0, 20.0)
+    with SpatialParquetReader(p) as r:
+        idx = r.index
+        runs = idx.page_runs(bbox)
+        hit = set(idx.query(bbox).tolist())
+        covered = set()
+        for rg, p0, p1 in runs:
+            assert p1 > p0
+            base = int(np.searchsorted(idx.row_group, rg))
+            for page in range(p0, p1):
+                covered.add(base + page)
+        assert covered == hit
+    os.unlink(p)
+
+
+def test_bytes_read_counts_every_blob(rng):
+    p = tempfile.mktemp(".spqf")
+    _write_sample(p, rng, row_group_records=1 << 20)
+    with SpatialParquetReader(p) as r:
+        # full scan reads every blob: bytes_read must equal bytes_total
+        _, _, st = r.read_columnar()
+        assert st.bytes_read == st.bytes_total
+        # geometry-only projection skips the extra pages
+        _, _, st_geo = r.read_columnar(columns=("geometry",))
+        assert 0 < st_geo.bytes_read < st.bytes_read
+        # extras-only projection still accounts for what it reads
+        _, extras, st_extra = r.read_columnar(columns=("ts",))
+        assert len(extras["ts"]) == 20_000
+        assert st_extra.bytes_read > 0
+        assert st_extra.bytes_read < st_geo.bytes_read
+        # and a pruned query reads strictly less than the full scan
+        _, _, st_q = r.read_columnar(bbox=(-95.0, -95.0, -70.0, -70.0))
+        assert 0 < st_q.bytes_read < st.bytes_read
+    os.unlink(p)
+
+
+def test_extras_only_projection_matches(rng):
+    p = tempfile.mktemp(".spqf")
+    rng2 = np.random.default_rng(5)
+    pts, cols = _point_cols(rng2, 4000)
+    ts = np.arange(4000, dtype=np.int64)
+    write_file(p, columns=cols, extra={"ts": ts}, extra_schema={"ts": "<i8"},
+               page_values=512)
+    with SpatialParquetReader(p) as r:
+        geo, extras, _ = r.read_columnar(columns=("ts",))
+        assert geo is None
+        assert np.array_equal(extras["ts"], ts)  # unsorted write: order kept
+    os.unlink(p)
+
+
+def test_index_entries_view_matches_arrays(rng):
+    p = tempfile.mktemp(".spqf")
+    _write_sample(p, rng, row_group_records=6000)
+    with SpatialParquetReader(p) as r:
+        idx = r.index
+        entries = idx.entries
+        assert len(entries) == len(idx)
+        for i in (0, len(entries) // 2, len(entries) - 1):
+            e = entries[i]
+            assert e.row_group == int(idx.row_group[i])
+            assert e.page == int(idx.page[i])
+            assert e.rec_start == int(idx.rec_start[i])
+            assert e.nbytes == int(idx.nbytes[i])
+            assert e.bbox[0] <= e.bbox[2] and e.bbox[1] <= e.bbox[3]
+    os.unlink(p)
+
+
+def test_format_magic_and_footer_unchanged(rng):
+    from repro.core.writer import MAGIC
+    import struct
+
+    p = tempfile.mktemp(".spqf")
+    _write_sample(p, rng)
+    blob = open(p, "rb").read()
+    assert blob.startswith(MAGIC) and blob.endswith(MAGIC)
+    (flen,) = struct.unpack("<I", blob[-(len(MAGIC) + 4):-len(MAGIC)])
+    assert flen < len(blob)
+    with SpatialParquetReader(p) as r:
+        assert r.footer["version"] == 1
+        assert set(r.footer["row_groups"][0]) >= {
+            "type", "type_rep", "rep", "defn", "x_pages", "y_pages", "extra",
+        }
+    os.unlink(p)
