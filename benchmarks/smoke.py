@@ -8,8 +8,11 @@ baseline::
 
 Reported fields: ``write_s``, ``read_columnar_s`` (coalesced fast path),
 ``read_columnar_legacy_s`` (one read per blob, same decode), ``file_bytes``,
-``raw_coord_bytes``, ``n_records``, ``n_values``. Timings are best-of-N to
-shrink scheduler noise.
+``raw_coord_bytes``, ``n_records``, ``n_values``, plus the sharded-dataset
+trajectory: ``dataset_write_s``, ``dataset_scan_s`` (async full scan over
+``dataset_n_shards`` shards), ``dataset_scan_bbox_s`` and its pruning ratio
+``dataset_bbox_bytes_read``/``dataset_bytes_total``. Timings are best-of-N
+to shrink scheduler noise.
 """
 
 from __future__ import annotations
@@ -18,17 +21,22 @@ import argparse
 import json
 import os
 import platform
+import shutil
+import tempfile
 import time
 
 from repro.core.reader import SpatialParquetReader
 from repro.core.writer import write_file
+from repro.dataset import SpatialDatasetScanner, write_dataset
 
 from .common import SCALE_1, make_dataset, tmppath
 
 
-def run(scale: float = 0.25, dataset: str = "PT", repeats: int = 3) -> dict:
+def run(scale: float = 0.25, dataset: str = "PT", repeats: int = 3,
+        n_shards: int = 4) -> dict:
     cols = make_dataset(dataset, scale, sort="hilbert")
     path = tmppath(".spqf")
+    droot = tempfile.mkdtemp(prefix="smoke_ds_")
     try:
         write_s = min(
             _timed(lambda: write_file(path, columns=cols, sort=None, codec="none"))
@@ -43,9 +51,26 @@ def run(scale: float = 0.25, dataset: str = "PT", repeats: int = 3) -> dict:
                 _timed(lambda: r.read_columnar(coalesce=False)) for _ in range(repeats)
             )
             geo, _, stats = r.read_columnar()
+
+        # sharded dataset: async full scan + shard-pruned bbox scan
+        dataset_write_s = min(
+            _timed(lambda: write_dataset(
+                droot, columns=cols, n_shards=n_shards, sort="hilbert",
+                codec="none"))
+            for _ in range(repeats)
+        )
+        sc = SpatialDatasetScanner(droot, max_workers=n_shards)
+        dataset_scan_s = min(_timed(lambda: sc.scan()) for _ in range(repeats))
+        x0, y0, x1, y1 = sc.manifest.mbr
+        bbox = (x0, y0, x0 + (x1 - x0) / 4, y0 + (y1 - y0) / 4)
+        dataset_scan_bbox_s = min(
+            _timed(lambda: sc.scan(bbox=bbox)) for _ in range(repeats)
+        )
+        _, _, dstats = sc.scan(bbox=bbox)
     finally:
         if os.path.exists(path):
             os.unlink(path)
+        shutil.rmtree(droot, ignore_errors=True)
     return {
         "dataset": dataset,
         "scale": scale,
@@ -56,6 +81,13 @@ def run(scale: float = 0.25, dataset: str = "PT", repeats: int = 3) -> dict:
         "file_bytes": file_bytes,
         "raw_coord_bytes": int(cols.n_values) * 2 * cols.x.dtype.itemsize,
         "bytes_read": stats.bytes_read,
+        "dataset_n_shards": n_shards,
+        "dataset_write_s": round(dataset_write_s, 6),
+        "dataset_scan_s": round(dataset_scan_s, 6),
+        "dataset_scan_bbox_s": round(dataset_scan_bbox_s, 6),
+        "dataset_bbox_bytes_read": dstats.bytes_read,
+        "dataset_bytes_total": dstats.bytes_total,
+        "dataset_bbox_shards_read": dstats.shards_read,
         "n_records": int(geo.n_records),
         "n_values": int(geo.n_values),
         "python": platform.python_version(),
@@ -75,8 +107,10 @@ def main() -> None:
     ap.add_argument("--dataset", default="PT")
     ap.add_argument("--out", default="BENCH_read.json")
     ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--shards", type=int, default=4)
     args = ap.parse_args()
-    result = run(scale=args.scale, dataset=args.dataset, repeats=args.repeats)
+    result = run(scale=args.scale, dataset=args.dataset, repeats=args.repeats,
+                 n_shards=args.shards)
     with open(args.out, "w") as fh:
         json.dump(result, fh, indent=1)
         fh.write("\n")

@@ -51,6 +51,23 @@ from .writer import MAGIC, permute_records
 _LEVEL_NAMES = ("type", "type_rep", "rep", "defn")
 
 
+def footer_data_bytes(footer: dict) -> int:
+    """Total stored bytes of every blob (levels, coord pages, extras)."""
+    total = 0
+    for rg in footer["row_groups"]:
+        total += sum(rg[name]["nbytes"] for name in _LEVEL_NAMES)
+        total += sum(p["nbytes"] for p in rg["x_pages"])
+        total += sum(p["nbytes"] for p in rg["y_pages"])
+        for ep in rg.get("extra", {}).values():
+            total += sum(p["nbytes"] for p in ep)
+    return total
+
+
+def footer_page_count(footer: dict) -> int:
+    """Number of x/y page pairs (the unit of the per-page spatial index)."""
+    return sum(len(rg["x_pages"]) for rg in footer["row_groups"])
+
+
 @dataclass
 class ReadStats:
     """Pruning accounting for the light-weight index (paper Figure 11).
@@ -58,6 +75,12 @@ class ReadStats:
     ``bytes_read``/``bytes_total`` count every stored blob (level streams,
     coordinate pages, extra-column pages) — not just x/y pages — so pruning
     ratios reflect what actually hits the disk.
+
+    Stats are *mergeable*: ``a + b`` (or ``a.merge(b)``, or ``sum(stats)``)
+    field-wise sums two accounts, so a multi-shard dataset scan reports one
+    aggregate. ``shards_total``/``shards_read`` stay 0 for single-file reads
+    and are filled in by the dataset scanner, where pruned shards contribute
+    their page/byte totals but nothing to the ``*_read`` side.
     """
 
     pages_total: int = 0
@@ -66,10 +89,39 @@ class ReadStats:
     bytes_read: int = 0
     records_scanned: int = 0
     records_returned: int = 0
+    shards_total: int = 0
+    shards_read: int = 0
 
     @property
     def pages_skipped(self) -> int:
         return self.pages_total - self.pages_read
+
+    @property
+    def shards_skipped(self) -> int:
+        return self.shards_total - self.shards_read
+
+    def merge(self, other: "ReadStats") -> "ReadStats":
+        """Field-wise sum of two accounts (one aggregate per dataset scan)."""
+        return ReadStats(
+            pages_total=self.pages_total + other.pages_total,
+            pages_read=self.pages_read + other.pages_read,
+            bytes_total=self.bytes_total + other.bytes_total,
+            bytes_read=self.bytes_read + other.bytes_read,
+            records_scanned=self.records_scanned + other.records_scanned,
+            records_returned=self.records_returned + other.records_returned,
+            shards_total=self.shards_total + other.shards_total,
+            shards_read=self.shards_read + other.shards_read,
+        )
+
+    def __add__(self, other):
+        if not isinstance(other, ReadStats):
+            return NotImplemented
+        return self.merge(other)
+
+    def __radd__(self, other):
+        if other == 0:  # support sum(list_of_stats)
+            return self
+        return NotImplemented
 
 
 class _CoalescedRanges:
@@ -148,14 +200,7 @@ class SpatialParquetReader:
         return msgpack.unpackb(fh.read(flen), raw=False, strict_map_key=False)
 
     def _total_data_bytes(self) -> int:
-        total = 0
-        for rg in self.footer["row_groups"]:
-            total += sum(rg[name]["nbytes"] for name in _LEVEL_NAMES)
-            total += sum(p["nbytes"] for p in rg["x_pages"])
-            total += sum(p["nbytes"] for p in rg["y_pages"])
-            for ep in rg.get("extra", {}).values():
-                total += sum(p["nbytes"] for p in ep)
-        return total
+        return footer_data_bytes(self.footer)
 
     # -------------------------------------------------------------- read API
     def read_columnar(

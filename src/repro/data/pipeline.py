@@ -6,10 +6,19 @@ sequence packing -> double-buffered prefetch thread -> per-step batches shaped
 ``(accum, micro_batch, seq)`` ready for ``jax.device_put`` under the batch
 sharding.
 
+Sources may be single ``.spqf`` files *or* sharded dataset directories
+(``repro.dataset``): datasets are expanded to their shard files up front —
+pruned by the batcher's bbox via the manifest's shard MBRs — so the epoch
+permutation stripes over *shards*, not whole files. Smaller shuffle units
+mean better mixing and a bounded working set per read.
+
 Straggler mitigation (host level): the prefetch queue is bounded; if the
 producer stalls past ``stall_timeout`` the consumer re-serves the previous
 batch and increments a counter instead of blocking the whole step loop — on a
 multi-host pod this is the difference between one slow VM and a global stall.
+Producer *failures* are not stalls: a worker-thread exception is forwarded
+through the queue and re-raised by ``__next__`` promptly, not after a
+timeout, so a corrupt shard surfaces as the real error at the step loop.
 """
 
 from __future__ import annotations
@@ -24,13 +33,36 @@ from repro.core.reader import SpatialParquetReader
 from .tokenizer import GeoTokenizer
 
 
+def expand_sources(sources, bbox=None) -> list[str]:
+    """Expand dataset directories into shard file paths; files pass through.
+
+    Shards of a dataset are pruned by ``bbox`` against the manifest MBRs
+    (shard-level index) before any shard is opened; plain file paths are
+    never pruned here — the reader's page index handles them.
+    """
+    from repro.dataset import SpatialDatasetScanner, is_dataset
+
+    out: list[str] = []
+    for src in sources:
+        if is_dataset(src):
+            out.extend(SpatialDatasetScanner(src).shard_paths(bbox))
+        else:
+            out.append(str(src))
+    return out
+
+
 class TrajectoryBatcher:
     """Packs tokenized trajectories into LM batches."""
 
     def __init__(self, files, tokenizer: GeoTokenizer, *, seq_len: int,
                  global_batch: int, accum: int = 1, bbox=None, seed: int = 0,
                  loop: bool = True):
-        self.files = list(files)
+        self.files = expand_sources(files, bbox)
+        if not self.files:
+            raise ValueError(
+                "TrajectoryBatcher has no input shards/files"
+                + (" (bbox pruned every shard)" if bbox is not None else "")
+            )
         self.tok = tokenizer
         self.seq_len = seq_len
         self.global_batch = global_batch
@@ -71,14 +103,32 @@ class TrajectoryBatcher:
             yield {"tokens": toks.astype(np.int32)}
 
 
+class _ProducerFailure:
+    """In-queue envelope carrying a worker-thread exception to the consumer."""
+
+    __slots__ = ("exc",)
+
+    def __init__(self, exc: BaseException):
+        self.exc = exc
+
+
 class Prefetcher:
-    """Bounded-queue background producer with stall skip-and-reuse."""
+    """Bounded-queue background producer with stall skip-and-reuse.
+
+    Worker exceptions are delivered in-band (after any items already
+    buffered) and re-raised by ``__next__`` as soon as they are dequeued —
+    the consumer never waits out ``stall_timeout`` for a producer that is
+    already dead, and the failure is never silently converted into an early
+    ``StopIteration``.
+    """
 
     def __init__(self, iterable, depth: int = 4, stall_timeout: float = 30.0):
         self._q: queue.Queue = queue.Queue(maxsize=depth)
         self._it = iter(iterable)
         self._done = object()
         self._last = None
+        self._exc: BaseException | None = None
+        self._finished = False
         self.stalls = 0
         self.stall_timeout = stall_timeout
         self._thread = threading.Thread(target=self._run, daemon=True)
@@ -88,13 +138,19 @@ class Prefetcher:
         try:
             for item in self._it:
                 self._q.put(item)
-        finally:
+        except BaseException as e:  # noqa: BLE001 - forwarded to the consumer
+            self._q.put(_ProducerFailure(e))
+        else:
             self._q.put(self._done)
 
     def __iter__(self):
         return self
 
     def __next__(self):
+        if self._exc is not None:
+            raise self._exc  # producer already failed; keep failing
+        if self._finished:
+            raise StopIteration  # exhaustion is sticky too: no reuse-as-stall
         try:
             item = self._q.get(timeout=self.stall_timeout)
         except queue.Empty:
@@ -103,7 +159,11 @@ class Prefetcher:
             else:
                 self.stalls += 1
                 return self._last
+        if isinstance(item, _ProducerFailure):
+            self._exc = item.exc
+            raise self._exc
         if item is self._done:
+            self._finished = True
             raise StopIteration
         self._last = item
         return item

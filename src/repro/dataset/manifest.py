@@ -1,0 +1,151 @@
+"""Dataset manifest: the JSON catalog of a sharded Spatial Parquet lake.
+
+A *dataset* is a directory of ``.spqf`` shard files plus a ``manifest.json``
+describing them — the multi-file analog of one file's footer. Per shard it
+records the MBR (the shard-level spatial index pruned before any shard file
+is even opened), row/value counts, and the page/byte totals needed to keep
+:class:`~repro.core.reader.ReadStats` honest for shards that were pruned
+without being read. Dataset-wide schema (coordinate dtype, codec, encoding,
+extra columns, SFC sort method) lives at the top level so every shard is
+interchangeable.
+
+The manifest is deliberately plain JSON (not msgpack like the footer): it is
+the human-visible catalog of the lake, the piece an external orchestrator
+(or a later object-store layout) would list and diff.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import dataclass, field
+
+MANIFEST_NAME = "manifest.json"
+DATASET_FORMAT = "spatial-parquet-dataset"
+MANIFEST_VERSION = 1
+
+
+@dataclass
+class ShardInfo:
+    """One shard's catalog entry (everything pruning needs, file unopened)."""
+
+    path: str  # relative to the dataset root
+    mbr: tuple[float, float, float, float]  # xmin, ymin, xmax, ymax
+    n_records: int
+    n_values: int
+    n_pages: int  # x/y page pairs (per-page index size)
+    data_bytes: int  # stored bytes of every blob in the shard
+    file_bytes: int  # on-disk size incl. magic + footer
+
+    def to_dict(self) -> dict:
+        return {
+            "path": self.path,
+            "mbr": [float(v) for v in self.mbr],
+            "n_records": int(self.n_records),
+            "n_values": int(self.n_values),
+            "n_pages": int(self.n_pages),
+            "data_bytes": int(self.data_bytes),
+            "file_bytes": int(self.file_bytes),
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ShardInfo":
+        return cls(
+            path=d["path"],
+            mbr=tuple(d["mbr"]),
+            n_records=d["n_records"],
+            n_values=d["n_values"],
+            n_pages=d["n_pages"],
+            data_bytes=d["data_bytes"],
+            file_bytes=d["file_bytes"],
+        )
+
+
+@dataclass
+class DatasetManifest:
+    coord_dtype: str
+    codec: str
+    encoding: str
+    sort: str | None
+    extra_schema: dict[str, str]
+    shards: list[ShardInfo] = field(default_factory=list)
+    version: int = MANIFEST_VERSION
+
+    @property
+    def n_shards(self) -> int:
+        return len(self.shards)
+
+    @property
+    def n_records(self) -> int:
+        return sum(s.n_records for s in self.shards)
+
+    @property
+    def n_values(self) -> int:
+        return sum(s.n_values for s in self.shards)
+
+    @property
+    def mbr(self) -> tuple[float, float, float, float] | None:
+        """Union MBR of all shards (None for an empty dataset)."""
+        boxes = [s.mbr for s in self.shards if s.mbr[0] <= s.mbr[2]]
+        if not boxes:
+            return None
+        return (
+            min(b[0] for b in boxes),
+            min(b[1] for b in boxes),
+            max(b[2] for b in boxes),
+            max(b[3] for b in boxes),
+        )
+
+    def to_dict(self) -> dict:
+        return {
+            "format": DATASET_FORMAT,
+            "version": self.version,
+            "coord_dtype": self.coord_dtype,
+            "codec": self.codec,
+            "encoding": self.encoding,
+            "sort": self.sort,
+            "extra_schema": dict(self.extra_schema),
+            "n_shards": self.n_shards,
+            "n_records": self.n_records,
+            "shards": [s.to_dict() for s in self.shards],
+        }
+
+    def save(self, root) -> str:
+        path = os.path.join(str(root), MANIFEST_NAME)
+        with open(path, "w") as fh:
+            json.dump(self.to_dict(), fh, indent=1)
+            fh.write("\n")
+        return path
+
+    @classmethod
+    def load(cls, root) -> "DatasetManifest":
+        """Load from a dataset directory (or a manifest.json path directly)."""
+        path = str(root)
+        if os.path.isdir(path):
+            path = os.path.join(path, MANIFEST_NAME)
+        with open(path) as fh:
+            d = json.load(fh)
+        if d.get("format") != DATASET_FORMAT:
+            raise ValueError(f"{path}: not a {DATASET_FORMAT} manifest")
+        if d.get("version", 0) > MANIFEST_VERSION:
+            raise ValueError(f"{path}: manifest version {d['version']} too new")
+        return cls(
+            coord_dtype=d["coord_dtype"],
+            codec=d["codec"],
+            encoding=d["encoding"],
+            sort=d["sort"],
+            extra_schema=dict(d.get("extra_schema", {})),
+            shards=[ShardInfo.from_dict(s) for s in d["shards"]],
+            version=d.get("version", MANIFEST_VERSION),
+        )
+
+
+def is_dataset(path) -> bool:
+    """True if ``path`` is a dataset directory (holds a manifest.json)."""
+    p = str(path)
+    return os.path.isdir(p) and os.path.isfile(os.path.join(p, MANIFEST_NAME))
+
+
+def shard_path(root, shard: ShardInfo) -> str:
+    """Absolute path of a shard file under the dataset root."""
+    return os.path.join(str(root), shard.path)

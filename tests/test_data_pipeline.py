@@ -1,12 +1,13 @@
 """Geo tokenizer + Spatial-Parquet-backed training pipeline."""
 
 import os
+import time
 
 import numpy as np
 import pytest
 
 from repro.core.writer import write_file
-from repro.data.pipeline import TrajectoryBatcher
+from repro.data.pipeline import Prefetcher, TrajectoryBatcher, expand_sources
 from repro.data.synthetic import (
     PORTO_BBOX,
     buildings_like,
@@ -81,3 +82,86 @@ def test_batcher_bbox_pushdown(tmp_path):
     # record-exact pushdown: overshoot bounded by one trajectory's own extent
     # (a record intersecting the box keeps all its points) + one cell
     assert xy[:, 0].max() <= half[2] + 0.02 + cell_w
+
+
+def test_prefetcher_propagates_worker_exception_promptly():
+    """A raising iterable must surface its error well before stall_timeout."""
+
+    def boom():
+        raise ValueError("bad shard")
+        yield  # pragma: no cover - makes this a generator
+
+    pf = Prefetcher(boom(), depth=2, stall_timeout=30.0)
+    t0 = time.perf_counter()
+    with pytest.raises(ValueError, match="bad shard"):
+        next(pf)
+    assert time.perf_counter() - t0 < 5.0  # not a stall_timeout sit-out
+    # the failure is sticky, not converted into StopIteration
+    with pytest.raises(ValueError, match="bad shard"):
+        next(pf)
+    assert pf.stalls == 0
+
+
+def test_prefetcher_delivers_buffered_items_then_error():
+    def two_then_boom():
+        yield 1
+        yield 2
+        raise RuntimeError("producer died")
+
+    pf = Prefetcher(two_then_boom(), depth=4, stall_timeout=30.0)
+    assert next(pf) == 1
+    assert next(pf) == 2
+    with pytest.raises(RuntimeError, match="producer died"):
+        next(pf)
+
+
+def test_prefetcher_exhaustion_is_sticky():
+    """next() past StopIteration must not re-serve the last batch as a stall."""
+    pf = Prefetcher(iter([1, 2]), depth=4, stall_timeout=30.0)
+    assert list(pf) == [1, 2]
+    t0 = time.perf_counter()
+    with pytest.raises(StopIteration):
+        next(pf)
+    assert time.perf_counter() - t0 < 5.0  # no stall_timeout wait
+    assert pf.stalls == 0
+
+
+def test_batcher_rejects_empty_sources(tmp_path):
+    from repro.dataset import write_dataset
+
+    cols = porto_taxi_like(n_traj=50, seed=9)
+    root = tmp_path / "lake"
+    write_dataset(root, columns=cols, n_shards=2, sort="hilbert")
+    tok = GeoTokenizer(PORTO_BBOX, order=6)
+    with pytest.raises(ValueError, match="bbox pruned"):
+        TrajectoryBatcher([root], tok, seq_len=64, global_batch=4,
+                          bbox=(50.0, 50.0, 51.0, 51.0))
+    with pytest.raises(ValueError, match="no input"):
+        TrajectoryBatcher([], tok, seq_len=64, global_batch=4)
+
+
+def test_batcher_stripes_over_dataset_shards(tmp_path):
+    from repro.dataset import write_dataset
+
+    cols = porto_taxi_like(n_traj=300, seed=5)
+    root = tmp_path / "lake"
+    write_dataset(root, columns=cols, n_shards=4, sort="hilbert",
+                  page_values=2048)
+    # dataset dirs expand to their shard files (the striping unit)
+    assert len(expand_sources([root])) == 4
+    single = os.path.join(tmp_path, "one.spqf")
+    write_file(single, columns=cols, sort="hilbert")
+    assert expand_sources([single]) == [single]
+    # bbox pruning drops whole shards before the batcher ever opens them
+    corner = (PORTO_BBOX[0], PORTO_BBOX[1],
+              PORTO_BBOX[0] + 0.05, PORTO_BBOX[1] + 0.04)
+    tok = GeoTokenizer(PORTO_BBOX, order=6)
+    b = TrajectoryBatcher([root], tok, seq_len=64, global_batch=4, bbox=corner)
+    assert 0 < len(b.files) < 4
+    batch = next(iter(b))
+    assert batch["tokens"].shape == (1, 4, 64)
+    # full-extent batcher over shards yields well-formed batches too
+    b2 = TrajectoryBatcher([root, single], tok, seq_len=64, global_batch=4)
+    assert len(b2.files) == 5
+    batch = next(iter(Prefetcher(b2, depth=2)))
+    assert batch["tokens"].shape == (1, 4, 64)

@@ -1,0 +1,234 @@
+"""Sharded dataset layer: manifest, shard pruning, async scans, stats merge."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.reader import ReadStats, SpatialParquetReader
+from repro.core.writer import write_file
+from repro.data.synthetic import PORTO_BBOX, porto_taxi_like
+from repro.dataset import (
+    DatasetIndex,
+    DatasetManifest,
+    SpatialDatasetScanner,
+    is_dataset,
+    shard_path,
+    write_dataset,
+)
+
+
+def _cols_and_extra(n_traj=400, seed=7):
+    cols = porto_taxi_like(n_traj=n_traj, seed=seed)
+    return cols, {"tid": np.arange(cols.n_records, dtype=np.int64)}
+
+
+def _grid_bboxes(n=3):
+    """n x n cells over Porto + full extent, None, and a far-away miss."""
+    x0, y0, x1, y1 = PORTO_BBOX
+    xs = np.linspace(x0, x1, n + 1)
+    ys = np.linspace(y0, y1, n + 1)
+    boxes = [
+        (xs[i], ys[j], xs[i + 1], ys[j + 1]) for i in range(n) for j in range(n)
+    ]
+    boxes.append(PORTO_BBOX)           # full extent
+    boxes.append((50.0, 50.0, 51.0, 51.0))  # empty: far from Porto
+    boxes.append(None)                 # no filter
+    return boxes
+
+
+# ------------------------------------------------------------ ReadStats merge
+def test_readstats_merge_arithmetic():
+    a = ReadStats(pages_total=10, pages_read=4, bytes_total=1000, bytes_read=400,
+                  records_scanned=40, records_returned=30, shards_total=2,
+                  shards_read=1)
+    b = ReadStats(pages_total=6, pages_read=6, bytes_total=600, bytes_read=600,
+                  records_scanned=60, records_returned=60, shards_total=1,
+                  shards_read=1)
+    for m in (a + b, a.merge(b), sum([a, b])):
+        assert m.pages_total == 16 and m.pages_read == 10
+        assert m.bytes_total == 1600 and m.bytes_read == 1000
+        assert m.records_scanned == 100 and m.records_returned == 90
+        assert m.shards_total == 3 and m.shards_read == 2
+        assert m.pages_skipped == 6 and m.shards_skipped == 1
+    # pages_skipped aggregates: (10-4) + (6-6) == sum of parts
+    assert (a + b).pages_skipped == a.pages_skipped + b.pages_skipped
+    # identity for sum() and original operands untouched
+    assert sum([a]) is a
+    assert a.pages_total == 10 and b.pages_total == 6
+    with pytest.raises(TypeError):
+        a + 5
+
+
+# ------------------------------------------------------------------ manifest
+def test_write_dataset_manifest_roundtrip(tmp_path):
+    cols, extra = _cols_and_extra()
+    root = tmp_path / "lake"
+    m = write_dataset(root, columns=cols, extra=extra, n_shards=4,
+                      sort="hilbert", page_values=2048)
+    assert is_dataset(root)
+    loaded = DatasetManifest.load(root)
+    assert loaded.n_shards == 4
+    assert loaded.n_records == cols.n_records == m.n_records
+    assert loaded.n_values == cols.n_values
+    assert loaded.sort == "hilbert"
+    assert loaded.extra_schema == {"tid": "<i8"}
+    assert loaded.coord_dtype == np.dtype(cols.x.dtype).str
+    # the manifest is plain JSON on disk
+    with open(os.path.join(root, "manifest.json")) as fh:
+        raw = json.load(fh)
+    assert raw["format"] == "spatial-parquet-dataset"
+    # per-shard entries match the shard files they describe
+    for s in loaded.shards:
+        p = shard_path(root, s)
+        assert os.path.getsize(p) == s.file_bytes
+        with SpatialParquetReader(p) as r:
+            assert r.n_records == s.n_records
+            assert len(r.index) == s.n_pages
+            g, _, _ = r.read_columnar()
+            assert s.mbr == pytest.approx(
+                (g.x.min(), g.y.min(), g.x.max(), g.y.max())
+            )
+    # union MBR covers every coordinate
+    mbr = loaded.mbr
+    assert mbr[0] <= cols.x.min() and mbr[2] >= cols.x.max()
+    assert mbr[1] <= cols.y.min() and mbr[3] >= cols.y.max()
+
+
+def test_dataset_fewer_records_than_shards(tmp_path):
+    cols, _ = _cols_and_extra(n_traj=3)
+    m = write_dataset(tmp_path / "tiny", columns=cols, n_shards=8)
+    assert m.n_shards == 3  # empty tails skipped
+    geo, _, st = SpatialDatasetScanner(tmp_path / "tiny").scan()
+    assert geo.n_records == 3
+    assert st.shards_total == st.shards_read == 3
+
+
+# -------------------------------------------------------- dataset-level index
+def test_dataset_index_query_matches_bruteforce(tmp_path):
+    cols, _ = _cols_and_extra()
+    m = write_dataset(tmp_path / "lake", columns=cols, n_shards=6,
+                      sort="hilbert", page_values=2048)
+    idx = DatasetIndex(m)
+    for bbox in _grid_bboxes():
+        hit = idx.query(bbox)
+        if bbox is None:
+            expect = list(range(m.n_shards))
+        else:
+            qx0, qy0, qx1, qy1 = bbox
+            expect = [
+                i for i, s in enumerate(m.shards)
+                if s.mbr[0] <= qx1 and s.mbr[2] >= qx0
+                and s.mbr[1] <= qy1 and s.mbr[3] >= qy0
+            ]
+        assert list(hit) == expect
+        # shard_runs is symmetric to page_runs: consecutive cover of hit
+        runs = idx.shard_runs(bbox, hit=hit)
+        covered = [i for s0, s1 in runs for i in range(s0, s1)]
+        assert covered == expect
+        assert all(s1 > s0 for s0, s1 in runs)
+    assert idx.selectivity(None) == 1.0
+    assert idx.selectivity((50.0, 50.0, 51.0, 51.0)) == 0.0
+
+
+# -------------------------------------------- single-file vs K-shard datasets
+@pytest.mark.parametrize("n_shards", [1, 4])
+def test_dataset_equals_single_file(tmp_path, n_shards):
+    """Same records as 1 file and K shards: identical geometry + pruning."""
+    cols, extra = _cols_and_extra()
+    single = os.path.join(tmp_path, "single.spqf")
+    write_file(single, columns=cols, extra=extra, sort="hilbert",
+               page_values=2048, extra_schema={"tid": "<i8"})
+    root = tmp_path / f"lake{n_shards}"
+    write_dataset(root, columns=cols, extra=extra, n_shards=n_shards,
+                  sort="hilbert", page_values=2048)
+    sc = SpatialDatasetScanner(root)
+    with SpatialParquetReader(single) as r:
+        for bbox in _grid_bboxes():
+            g1, e1, s1 = r.read_columnar(bbox=bbox, refine=True)
+            g2, e2, s2 = sc.scan(bbox=bbox, refine=True)
+            if g1 is None or g1.n_records == 0:
+                assert g2 is None or g2.n_records == 0
+                continue
+            # identical record sets; the global-SFC-sorted sharding even
+            # preserves record order, so arrays match bit-for-bit
+            assert np.array_equal(g1.x, g2.x)
+            assert np.array_equal(g1.y, g2.y)
+            assert np.array_equal(g1.types, g2.types)
+            assert np.array_equal(g1.rep, g2.rep)
+            assert np.array_equal(g1.defn, g2.defn)
+            assert np.array_equal(e1["tid"], e2["tid"])
+            assert s1.records_returned == s2.records_returned
+            if n_shards == 1:
+                # one shard holds the same pages as the single file:
+                # pruning decisions must be identical
+                assert s1.pages_read == s2.pages_read
+                assert s1.pages_total == s2.pages_total
+                assert s1.bytes_read == s2.bytes_read
+                assert s1.bytes_total == s2.bytes_total
+
+
+def test_async_scan_bit_identical_to_sequential(tmp_path):
+    cols, extra = _cols_and_extra(n_traj=600)
+    root = tmp_path / "lake"
+    write_dataset(root, columns=cols, extra=extra, n_shards=5,
+                  sort="hilbert", page_values=2048)
+    sc = SpatialDatasetScanner(root, max_workers=4)
+    for bbox in (None, PORTO_BBOX,
+                 (PORTO_BBOX[0], PORTO_BBOX[1],
+                  (PORTO_BBOX[0] + PORTO_BBOX[2]) / 2,
+                  (PORTO_BBOX[1] + PORTO_BBOX[3]) / 2)):
+        gp, ep, sp = sc.scan(bbox=bbox, parallel=True)
+        gs, es, ss = sc.scan(bbox=bbox, parallel=False)
+        assert np.array_equal(gp.x, gs.x) and np.array_equal(gp.y, gs.y)
+        assert gp.x.tobytes() == gs.x.tobytes()  # bit-identical coordinates
+        assert np.array_equal(ep["tid"], es["tid"])
+        assert sp == ss
+
+
+def test_shard_pruning_reads_strictly_fewer_bytes(tmp_path):
+    cols, _ = _cols_and_extra(n_traj=800)
+    root = tmp_path / "lake"
+    write_dataset(root, columns=cols, n_shards=6, sort="hilbert",
+                  page_values=2048)
+    sc = SpatialDatasetScanner(root)
+    _, _, full = sc.scan()
+    assert full.shards_read == full.shards_total == 6
+    assert full.bytes_read == full.bytes_total
+    # a corner query must drop whole shards, and the aggregate ReadStats
+    # must show it: same denominator, strictly smaller numerator
+    corner = (PORTO_BBOX[0], PORTO_BBOX[1],
+              PORTO_BBOX[0] + 0.05, PORTO_BBOX[1] + 0.04)
+    _, _, st = sc.scan(bbox=corner)
+    assert st.shards_total == 6 and 0 < st.shards_read < 6
+    assert st.bytes_total == full.bytes_total
+    assert st.pages_total == full.pages_total
+    assert st.bytes_read < full.bytes_read
+    assert st.pages_read < full.pages_read
+    # a miss reads nothing but still accounts for the whole dataset
+    _, _, miss = sc.scan(bbox=(50.0, 50.0, 51.0, 51.0))
+    assert miss.shards_read == 0 and miss.bytes_read == 0
+    assert miss.bytes_total == full.bytes_total
+
+
+def test_scanner_column_projection(tmp_path):
+    cols, extra = _cols_and_extra()
+    root = tmp_path / "lake"
+    write_dataset(root, columns=cols, extra=extra, n_shards=3,
+                  sort="hilbert", page_values=2048)
+    sc = SpatialDatasetScanner(root)
+    geo, ex, _ = sc.scan(columns=("geometry",))
+    assert geo is not None and ex == {}
+    geo, ex, st = sc.scan(columns=("tid",))
+    assert geo is None
+    assert np.array_equal(np.sort(ex["tid"]), np.arange(cols.n_records))
+    assert st.records_returned == cols.n_records
+
+
+def test_scanner_object_read(tmp_path):
+    cols, _ = _cols_and_extra(n_traj=40)
+    root = tmp_path / "lake"
+    write_dataset(root, columns=cols, n_shards=2, sort="hilbert")
+    geoms, st = SpatialDatasetScanner(root).read()
+    assert len(geoms) == 40 == st.records_returned
