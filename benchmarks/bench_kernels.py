@@ -3,6 +3,8 @@
 * host FP-delta codec throughput (the paper's encoder, vectorized numpy),
 * Pallas miniblock codec (interpret mode on CPU — correctness-plane numbers;
   real TPU timing comes from the roofline model),
+* page-stream device decode of the paper-exact format (host plan + batched
+  Pallas/jnp execution — the read path's ``device="jax"`` back half),
 * miniblock size penalty vs the paper-exact n* stream (DESIGN.md §5 claims
   <~8% on GPS-like data),
 * flash-attention kernel vs jnp oracle equivalence timing at small shape.
@@ -14,7 +16,12 @@ import time
 
 import numpy as np
 
-from repro.core.fp_delta import fp_delta_decode, fp_delta_encode
+from repro.core.fp_delta import (
+    fp_delta_decode,
+    fp_delta_encode,
+    fp_delta_encode_pages,
+    fp_delta_plan,
+)
 from repro.kernels import fp_delta as fpd
 
 from .common import make_dataset
@@ -41,6 +48,20 @@ def run(scale: float = 1.0) -> list[dict]:
     s, _ = _throughput(lambda p: fp_delta_decode(p, len(x64), np.float64), payload)
     rows.append(dict(table="K", name="host_fp_delta64_decode",
                      mbps=x64.nbytes / s / 1e6, n=len(x64)))
+
+    # page-stream device decode: host escape resolution + one batched launch
+    n_pages = 8
+    bounds = [(i * len(x64) // n_pages, (i + 1) * len(x64) // n_pages)
+              for i in range(n_pages)]
+    plans = [fp_delta_plan(payload, v1 - v0, np.float64)
+             for (payload, _), (v0, v1) in zip(
+                 fp_delta_encode_pages(x64, bounds), bounds)]
+    s, _ = _throughput(lambda: fpd.decode_pages(plans, use_pallas=True))
+    rows.append(dict(table="K", name="stream_decode64_interpret",
+                     mbps=x64.nbytes / s / 1e6, n=len(x64), pages=n_pages))
+    s, _ = _throughput(lambda: fpd.decode_pages(plans, use_pallas=False))
+    rows.append(dict(table="K", name="stream_decode64_ref",
+                     mbps=x64.nbytes / s / 1e6, n=len(x64), pages=n_pages))
 
     p32, st32 = fp_delta_encode(x32)
     stream = fpd.encode(x32, use_pallas=False)

@@ -7,7 +7,9 @@ baseline::
     PYTHONPATH=src python -m benchmarks.smoke [--scale 0.25] [--out BENCH_read.json]
 
 Reported fields: ``write_s``, ``read_columnar_s`` (coalesced fast path),
-``read_columnar_legacy_s`` (one read per blob, same decode), ``file_bytes``,
+``read_columnar_legacy_s`` (one read per blob, same decode),
+``device_decode_s`` (``device="jax"`` page-stream decode — Pallas interpret
+mode off-TPU, so this is a correctness-plane number in CI), ``file_bytes``,
 ``raw_coord_bytes``, ``n_records``, ``n_values``, plus the sharded-dataset
 trajectory: ``dataset_write_s``, ``dataset_scan_s`` (async full scan over
 ``dataset_n_shards`` shards), ``dataset_scan_bbox_s`` and its pruning ratio
@@ -50,6 +52,11 @@ def run(scale: float = 0.25, dataset: str = "PT", repeats: int = 3,
             read_legacy_s = min(
                 _timed(lambda: r.read_columnar(coalesce=False)) for _ in range(repeats)
             )
+            r.read_columnar(device="jax")  # warm-up: jit compile off the clock
+            device_decode_s = min(
+                _timed(lambda: r.read_columnar(device="jax"))
+                for _ in range(repeats)
+            )
             geo, _, stats = r.read_columnar()
 
         # sharded dataset: async full scan + shard-pruned bbox scan
@@ -78,6 +85,7 @@ def run(scale: float = 0.25, dataset: str = "PT", repeats: int = 3,
         "write_s": round(write_s, 6),
         "read_columnar_s": round(read_s, 6),
         "read_columnar_legacy_s": round(read_legacy_s, 6),
+        "device_decode_s": round(device_decode_s, 6),
         "file_bytes": file_bytes,
         "raw_coord_bytes": int(cols.n_values) * 2 * cols.x.dtype.itemsize,
         "bytes_read": stats.bytes_read,

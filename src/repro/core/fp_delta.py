@@ -47,6 +47,16 @@ read path, so every stage is one numpy pass):
 * ``out=`` lets callers (the coalesced reader) decode straight into a slice
   of a preallocated coordinate array, eliminating list-append +
   ``np.concatenate`` from the read path.
+* **Decode is split into plan + execute.** :func:`fp_delta_plan` performs
+  the only inherently sequential part of Algorithm 2 — header parsing and
+  escape resolution, i.e. locating every token once reset markers shift
+  later offsets — and returns an :class:`FPDeltaPlan` holding the packed
+  words plus the resolved ``(offsets, flags)``. :func:`fp_delta_execute`
+  finishes on the host (gather, un-zigzag, segmented cumsum);
+  ``repro.kernels.fp_delta`` consumes the very same plans to run that
+  second half on the accelerator (Pallas page-stream decode), so the two
+  back ends can never disagree about the format. :func:`fp_delta_decode`
+  is plan + host execute and stays the oracle.
 """
 
 from __future__ import annotations
@@ -346,47 +356,74 @@ def _resolve_escapes_scan(
     return offs, flags
 
 
-def fp_delta_decode(
-    payload, n_values: int, dtype, out: np.ndarray | None = None
-) -> np.ndarray:
-    """Decode ``n_values`` elements of ``dtype`` (paper Algorithm 2).
+@dataclass(frozen=True)
+class FPDeltaPlan:
+    """Host-resolved decode plan for one page (the device-decode contract).
 
-    ``payload`` may be any bytes-like buffer (``bytes``, ``memoryview``).
-    ``out``, if given, must be a contiguous 1-D array of exactly ``n_values``
-    elements of ``dtype``; the decode writes into it and returns it, letting
-    callers fill slices of a preallocated column without a concat pass.
+    The only inherently sequential part of Algorithm 2 — locating every token
+    once reset markers shift later offsets — is resolved here on the host.
+    What remains (fixed-width gather, escape injection, segmented cumsum,
+    un-zigzag, float bitcast) is embarrassingly parallel; it is executed
+    either by :func:`fp_delta_execute` (host numpy) or by the Pallas
+    page-stream kernel in :mod:`repro.kernels.fp_delta`, which batches many
+    plans into one launch.
+
+    ``offsets[j]``/``flags[j]`` describe delta token ``j`` (``n_values - 1``
+    entries): its absolute bit offset in ``words`` and whether it is the
+    reset marker (the escaped raw W-bit value then sits at ``offsets[j] +
+    n``). Raw mode (``n == 0``) has no delta tokens: every value is stored
+    raw at ``width`` bits starting from bit ``HEADER_BITS``.
     """
+
+    dtype: np.dtype
+    width: int            # 32 or 64
+    n: int                # token width n* (0 => raw mode)
+    n_values: int
+    first: int            # raw W-bit pattern of value 0 (0 when empty/raw)
+    words: np.ndarray     # uint64 packed stream incl. trailing spill word
+    offsets: np.ndarray   # (n_deltas,) int64 token bit offsets
+    flags: np.ndarray     # (n_deltas,) bool: True where token is a marker
+    n_escapes: int        # escape count recovered from the payload length
+
+
+def _check_out(out: np.ndarray | None, n_values: int, dtype: np.dtype) -> None:
+    if out is None:
+        return
+    if out.dtype != dtype or out.ndim != 1 or len(out) != n_values:
+        raise ValueError("out must be a 1-D array of n_values elements of dtype")
+    if not out.flags.c_contiguous:
+        raise ValueError("out must be C-contiguous")
+
+
+_EMPTY_OFFS = np.zeros(0, dtype=np.int64)
+_EMPTY_FLAGS = np.zeros(0, dtype=bool)
+
+
+def fp_delta_plan(payload, n_values: int, dtype) -> FPDeltaPlan:
+    """Parse a payload's header and resolve every escape (Algorithm 2 front
+    half). ``payload`` may be any bytes-like buffer (``bytes``,
+    ``memoryview``)."""
     dtype = np.dtype(dtype)
     width = dtype.itemsize * 8
     if width not in (32, 64):
         raise TypeError(f"unsupported dtype {dtype}")
-    s, u = _SIGNED[width], _UNSIGNED[width]
-    if out is not None:
-        if out.dtype != dtype or out.ndim != 1 or len(out) != n_values:
-            raise ValueError("out must be a 1-D array of n_values elements of dtype")
-        if not out.flags.c_contiguous:
-            raise ValueError("out must be C-contiguous")
     if n_values == 0:
-        return out if out is not None else np.zeros(0, dtype=dtype)
-
-    out_arr = out if out is not None else np.empty(n_values, dtype=dtype)
-    out_int = out_arr.view(s)
+        return FPDeltaPlan(dtype, width, 0, 0, 0, np.zeros(1, np.uint64),
+                           _EMPTY_OFFS, _EMPTY_FLAGS, 0)
 
     words = bytes_to_words(payload)
     n = read_one(words, 0, HEADER_BITS)
     cursor = HEADER_BITS
+    if n == 0:  # raw mode: every value raw at W bits, no delta tokens
+        return FPDeltaPlan(dtype, width, 0, n_values, 0, words,
+                           _EMPTY_OFFS, _EMPTY_FLAGS, 0)
 
-    if n == 0:
-        raws = unpack_fixed(words, cursor, n_values, width)
-        out_int[:] = raws.astype(u).view(s)
-        return out_arr
-
-    first = np.uint64(read_one(words, cursor, width))
+    first = read_one(words, cursor, width)
     cursor += width
-    out_int[0] = _to_signed_scalar(first, width)
     n_deltas = n_values - 1
     if n_deltas == 0:
-        return out_arr
+        return FPDeltaPlan(dtype, width, n, n_values, first, words,
+                           _EMPTY_OFFS, _EMPTY_FLAGS, 0)
 
     # Exact escape count from the payload length: total bits are
     # HEADER + W + n*D + W*E plus < 8 bits of byte padding, and W >= 32 > 7,
@@ -395,18 +432,53 @@ def fp_delta_decode(
     n_escapes = max(0, min(int(n_escapes), n_deltas))
 
     if n_escapes == 0:
-        z = unpack_fixed(words, cursor, n_deltas, n)
+        offs = cursor + np.int64(n) * np.arange(n_deltas, dtype=np.int64)
+        flags = np.zeros(n_deltas, dtype=bool)
+    else:
+        resolved = None
+        if n_escapes <= _FIXPOINT_MAX_ESCAPES:
+            resolved = _resolve_escapes_fixpoint(
+                words, cursor, n_deltas, n, width, n_escapes)
+        if resolved is None:
+            resolved = _resolve_escapes_scan(
+                words, cursor, n_deltas, n, width, n_escapes)
+        offs, flags = resolved
+    return FPDeltaPlan(dtype, width, n, n_values, first, words,
+                       offs, flags, n_escapes)
+
+
+def fp_delta_execute(plan: FPDeltaPlan, out: np.ndarray | None = None) -> np.ndarray:
+    """Finish a resolved plan on the host (Algorithm 2 back half).
+
+    This is the oracle the accelerator path must match bit-for-bit.
+    """
+    dtype, width = plan.dtype, plan.width
+    s, u = _SIGNED[width], _UNSIGNED[width]
+    _check_out(out, plan.n_values, dtype)
+    if plan.n_values == 0:
+        return out if out is not None else np.zeros(0, dtype=dtype)
+
+    out_arr = out if out is not None else np.empty(plan.n_values, dtype=dtype)
+    out_int = out_arr.view(s)
+    words = plan.words
+
+    if plan.n == 0:
+        raws = unpack_fixed(words, HEADER_BITS, plan.n_values, width)
+        out_int[:] = raws.astype(u).view(s)
+        return out_arr
+
+    out_int[0] = _to_signed_scalar(np.uint64(plan.first), width)
+    n_deltas = plan.n_values - 1
+    if n_deltas == 0:
+        return out_arr
+
+    n, offs, flags = plan.n, plan.offsets, plan.flags
+    if plan.n_escapes == 0:
+        z = unpack_at(words, offs, n)
         deltas = unzigzag(z.astype(u), width)
         out_int[1:] = out_int[0] + np.cumsum(deltas, dtype=s)
         return out_arr
 
-    resolved = None
-    if n_escapes <= _FIXPOINT_MAX_ESCAPES:
-        resolved = _resolve_escapes_fixpoint(words, cursor, n_deltas, n, width, n_escapes)
-    if resolved is None:
-        resolved = _resolve_escapes_scan(words, cursor, n_deltas, n, width, n_escapes)
-
-    offs, flags = resolved
     tok = unpack_at(words, offs, n)
     # One segmented cumsum over all reset segments at once: cumsum the inline
     # deltas (escapes contribute 0), then add a per-segment correction so each
@@ -424,6 +496,25 @@ def fp_delta_decode(
     out_int[1 : 1 + esc_idx[0]] = running[: esc_idx[0]]
     out_int[1 + esc_idx[0] :] = running[esc_idx[0] :] + np.repeat(corr, reps)
     return out_arr
+
+
+def fp_delta_decode(
+    payload, n_values: int, dtype, out: np.ndarray | None = None
+) -> np.ndarray:
+    """Decode ``n_values`` elements of ``dtype`` (paper Algorithm 2).
+
+    ``payload`` may be any bytes-like buffer (``bytes``, ``memoryview``).
+    ``out``, if given, must be a contiguous 1-D array of exactly ``n_values``
+    elements of ``dtype``; the decode writes into it and returns it, letting
+    callers fill slices of a preallocated column without a concat pass.
+    Wrong-dtype/wrong-length/non-contiguous buffers raise ``ValueError``
+    before any byte of the payload is parsed.
+    """
+    dtype = np.dtype(dtype)
+    if dtype.itemsize * 8 not in (32, 64):
+        raise TypeError(f"unsupported dtype {dtype}")
+    _check_out(out, n_values, dtype)
+    return fp_delta_execute(fp_delta_plan(payload, n_values, dtype), out=out)
 
 
 def encoded_size_bits(x: np.ndarray, n: int) -> int:

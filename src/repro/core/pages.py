@@ -19,7 +19,14 @@ try:
 except ImportError:  # pragma: no cover - zstd optional
     _zstd = None
 
-from .fp_delta import fp_delta_decode, fp_delta_encode, fp_delta_encode_pages
+from .fp_delta import (
+    FPDeltaPlan,
+    _check_out,
+    fp_delta_decode,
+    fp_delta_encode,
+    fp_delta_encode_pages,
+    fp_delta_plan,
+)
 
 ENC_FP_DELTA = "fp_delta"
 ENC_RAW = "raw"
@@ -138,12 +145,30 @@ def decode_page(
     if meta.encoding == ENC_FP_DELTA:
         return fp_delta_decode(payload, meta.count, dtype, out=out)
     if meta.encoding == ENC_RAW:
+        dtype = np.dtype(dtype)
         vals = np.frombuffer(payload, dtype=dtype, count=meta.count)
         if out is not None:
+            # same strict contract as fp_delta_decode: a wrong-dtype buffer
+            # would otherwise silently value-cast (lossy) instead of
+            # receiving the stored bits
+            _check_out(out, meta.count, dtype)
             out[:] = vals
             return out
         return vals.copy()
     raise ValueError(f"unknown encoding {meta.encoding!r}")
+
+
+def page_plan(buf, meta: PageMeta, dtype, codec: str) -> FPDeltaPlan:
+    """Host-resolve one stored page into an :class:`FPDeltaPlan`.
+
+    The front half of the device read path: decompress + header parse +
+    escape resolution on the host; the returned plan is what
+    ``repro.kernels.fp_delta.decode_pages`` batches onto the accelerator.
+    Only FP-delta pages have plans (raw pages are a plain ``frombuffer``).
+    """
+    if meta.encoding != ENC_FP_DELTA:
+        raise ValueError(f"page_plan requires fp_delta pages, got {meta.encoding!r}")
+    return fp_delta_plan(decompress(buf, codec), meta.count, dtype)
 
 
 def encode_pages(

@@ -30,6 +30,19 @@ and every page decodes straight into its slice via the ``out=`` contract of
 ``np.concatenate`` over coordinates. Pass ``coalesce=False`` to force the
 legacy one-read-per-blob behaviour (same decode path, used by the
 equivalence tests).
+
+Accelerated decode (``device="jax"``)
+-------------------------------------
+
+``read_columnar(device="jax")`` moves the FP-delta back half — fixed-width
+gather, escape injection, segmented cumsum, un-zigzag, float bitcast — onto
+the accelerator: the host still parses headers and resolves escapes
+(``fp_delta_plan``), then every surviving coordinate page of a row group is
+concatenated into one Pallas page-stream launch
+(``repro.kernels.fp_delta.decode_pages``). Results are **bit-identical** to
+the host path (asserted by tests/test_device_decode.py); raw-encoded pages,
+level streams, and extra columns stay on the host. Off-TPU the kernels run
+in interpret mode, so the full path is exercised in CPU CI.
 """
 
 from __future__ import annotations
@@ -44,7 +57,7 @@ import numpy as np
 from .columnar import GeometryColumns, assemble
 from .geometry import Geometry
 from .index import SpatialIndex
-from .pages import PageMeta, decode_page, decompress
+from .pages import ENC_FP_DELTA, PageMeta, decode_page, decompress, page_plan
 from .rle import decode_levels, rle_decode
 from .writer import MAGIC, permute_records
 
@@ -209,6 +222,7 @@ class SpatialParquetReader:
         columns: tuple[str, ...] | None = None,
         refine: bool = False,
         coalesce: bool = True,
+        device: str = "cpu",
     ) -> tuple[GeometryColumns | None, dict[str, np.ndarray], ReadStats]:
         """Decode records whose *page* bbox intersects ``bbox``.
 
@@ -217,7 +231,16 @@ class SpatialParquetReader:
         ``columns`` restricts which extra columns decode ("geometry" is
         implied unless columns excludes it explicitly). ``coalesce=False``
         disables batched range I/O (one read per blob; identical results).
+        ``device="jax"`` decodes surviving FP-delta coordinate pages on the
+        accelerator (one Pallas page-stream launch per row group,
+        bit-identical results); ``"cpu"`` is the default and the oracle.
         """
+        if device not in ("cpu", "jax"):
+            raise ValueError(f"device must be 'cpu' or 'jax', got {device!r}")
+        use_device = device == "jax"
+        if use_device:
+            # lazy: keeps jax out of host-only read paths
+            from repro.kernels.fp_delta import decode_pages as _device_decode_pages
         want_geom = columns is None or "geometry" in columns
         want_extra = (
             list(self.extra_schema)
@@ -308,6 +331,19 @@ class SpatialParquetReader:
                 type_starts = np.flatnonzero(type_rep == 0)
                 n_rec = len(slot_starts)
 
+            deferred: list[tuple] = []  # (plan, dest array, dest offset)
+
+            def _coord_page(blob, meta, dest, off, cnt):
+                """Decode one coordinate page now (host) or defer it to the
+                row group's batched device launch (fp_delta pages only)."""
+                if use_device and meta.encoding == ENC_FP_DELTA:
+                    deferred.append(
+                        (page_plan(blob, meta, self.coord_dtype, self.codec),
+                         dest, off))
+                else:
+                    decode_page(blob, meta, self.coord_dtype, self.codec,
+                                out=dest[off : off + cnt])
+
             for p0, p1 in runs:
                 j0, j1 = base + p0, base + p1 - 1
                 r0 = int(idx.rec_start[j0])
@@ -317,17 +353,12 @@ class SpatialParquetReader:
                     for p in range(p0, p1):
                         j = base + p
                         cnt = int(idx.count[j])
-                        meta_x = PageMeta.from_dict(xp[p])
-                        decode_page(
+                        _coord_page(
                             src.blob(int(idx.x_offset[j]), int(idx.x_nbytes[j])),
-                            meta_x, self.coord_dtype, self.codec,
-                            out=x_all[w : w + cnt],
-                        )
-                        decode_page(
+                            PageMeta.from_dict(xp[p]), x_all, w, cnt)
+                        _coord_page(
                             src.blob(int(idx.y_offset[j]), int(idx.y_nbytes[j])),
-                            PageMeta.from_dict(yp[p]), self.coord_dtype, self.codec,
-                            out=y_all[w : w + cnt],
-                        )
+                            PageMeta.from_dict(yp[p]), y_all, w, cnt)
                         w += cnt
                     stats.bytes_read += int(
                         idx.x_nbytes[j0 : j1 + 1].sum() + idx.y_nbytes[j0 : j1 + 1].sum()
@@ -358,6 +389,14 @@ class SpatialParquetReader:
                         stats.bytes_read += meta.nbytes
                         wk += meta.count
                 we += r1 - r0
+
+            if deferred:
+                # one batched page-stream launch per row group; the decoded
+                # bits are copied into the preallocated columns dtype-blind
+                # (view) so float/int coordinate columns both stay bit-exact
+                outs = _device_decode_pages([p for p, _, _ in deferred])
+                for (plan, dest, off), vals in zip(deferred, outs):
+                    dest[off : off + plan.n_values] = vals.view(dest.dtype)
 
         if want_geom and types_parts:
             geo = GeometryColumns(

@@ -45,11 +45,12 @@ class SpatialDatasetScanner:
         self.n_records = self.manifest.n_records
 
     # ------------------------------------------------------------- internals
-    def _read_shard(self, shard_i: int, bbox, columns, refine, coalesce):
+    def _read_shard(self, shard_i: int, bbox, columns, refine, coalesce, device):
         path = shard_path(self.root, self.manifest.shards[shard_i])
         with SpatialParquetReader(path, coalesce_max_gap=self.coalesce_max_gap) as r:
             return r.read_columnar(
-                bbox=bbox, columns=columns, refine=refine, coalesce=coalesce
+                bbox=bbox, columns=columns, refine=refine, coalesce=coalesce,
+                device=device,
             )
 
     # -------------------------------------------------------------- scan API
@@ -60,12 +61,16 @@ class SpatialDatasetScanner:
         refine: bool = False,
         parallel: bool = True,
         coalesce: bool = True,
+        device: str = "cpu",
     ) -> tuple[GeometryColumns | None, dict[str, np.ndarray], ReadStats]:
         """Dataset-wide ``read_columnar``: shard pruning + parallel fan-out.
 
         Same contract as the single-file reader, one level up; ``parallel=
         False`` forces a sequential shard loop (identical results, used by
-        the equivalence tests).
+        the equivalence tests). ``device="jax"`` runs each shard's FP-delta
+        page decode on the accelerator (bit-identical results); with
+        ``max_workers >= 2`` the device decode of shard N overlaps the
+        coalesced range reads of shard N+1, exactly like the host decode.
         """
         hit = self.index.query(bbox)
         hit_set = set(int(i) for i in hit)
@@ -81,14 +86,16 @@ class SpatialDatasetScanner:
         elif parallel and self.max_workers > 1 and len(hit) > 1:
             with ThreadPoolExecutor(max_workers=self.max_workers) as pool:
                 futures = [
-                    pool.submit(self._read_shard, int(i), bbox, columns, refine, coalesce)
+                    pool.submit(self._read_shard, int(i), bbox, columns,
+                                refine, coalesce, device)
                     for i in hit
                 ]
                 # gather in submission (manifest) order: deterministic output
                 results = [f.result() for f in futures]
         else:
             results = [
-                self._read_shard(int(i), bbox, columns, refine, coalesce) for i in hit
+                self._read_shard(int(i), bbox, columns, refine, coalesce, device)
+                for i in hit
             ]
 
         geos = [g for g, _, _ in results if g is not None]
@@ -106,13 +113,14 @@ class SpatialDatasetScanner:
         columns: tuple[str, ...] | None = None,
         refine: bool = False,
         coalesce: bool = True,
+        device: str = "cpu",
         parallel: bool = True,
     ):
         """Drop-in for :meth:`SpatialParquetReader.read_columnar` (same
         positional order; the extra ``parallel`` knob comes last)."""
         return self.scan(
             bbox=bbox, columns=columns, refine=refine,
-            parallel=parallel, coalesce=coalesce,
+            parallel=parallel, coalesce=coalesce, device=device,
         )
 
     def read(self, bbox=None, refine: bool = False) -> tuple[list[Geometry], ReadStats]:

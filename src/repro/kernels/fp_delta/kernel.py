@@ -15,6 +15,12 @@ values — exactly one (8, 128) VPU tile — entirely in VMEM:
   shifted-add scan (VPU-parallel).
 
 Grid iteration over miniblocks is embarrassingly parallel.
+
+The module also hosts the *page-stream* decode kernel
+(:func:`decode_stream_blocks`): on-device execution of the paper-exact
+FP-delta page format from host-resolved ``FPDeltaPlan``s — see the
+"page stream" section of ref.py for the format math and ops.py for the
+batching layer that feeds it.
 """
 
 from __future__ import annotations
@@ -28,12 +34,17 @@ from jax.experimental import pallas as pl
 from .ref import (
     MAX_EXC,
     MINIBLOCK,
+    STREAM_BLOCK,
     WIDTHS,
     choose_width,
     extract_exceptions,
+    gather_tokens,
     inject_exceptions,
     pack_candidate,
+    seg_combine,
+    segmented_scan,
     significant_bits_u32,
+    stream_values,
     unpack_candidate,
     unzigzag_u32,
     zigzag_i32,
@@ -119,6 +130,89 @@ def encode_blocks(x: jnp.ndarray, *, interpret: bool = True):
     packed, widths, anchors, exc_idx, exc_val, count = outs
     return (packed.reshape(n_blocks, MINIBLOCK), widths[:, 0], anchors[:, 0],
             exc_idx, exc_val, count[:, 0])
+
+
+# --------------------------------------------------------------- page stream
+# Decode kernel for the paper-exact FP-delta page format (see ref.py "page
+# stream" section for the math). Each grid step decodes one STREAM_BLOCK of
+# the concatenated value stream: fixed-width gather from the shared packed
+# words (whole array resident per step), escape injection, un-zigzag, and a
+# block-local segmented scan. Cross-block carries are stitched afterwards
+# with one tiny associative scan over per-block summaries — the grid stays
+# embarrassingly parallel, like the miniblock codec above.
+
+
+def _stream_decode_kernel(words_ref, off_ref, nbits_ref, anch_ref,
+                          lo_ref, hi_ref, seen_ref):
+    words = words_ref[...].reshape(-1).astype(jnp.uint32)
+    offs = off_ref[...].reshape(STREAM_BLOCK)
+    nb = nbits_ref[...].reshape(STREAM_BLOCK)
+    anc = anch_ref[...].reshape(STREAM_BLOCK) != 0
+    lo, hi = gather_tokens(words, offs, nb)
+    vlo, vhi = stream_values(lo, hi, anc)
+    flo, fhi, seen = segmented_scan(vlo, vhi, anc)
+    lo_ref[...] = flo.astype(jnp.int32).reshape(1, *_BLOCK_2D)
+    hi_ref[...] = fhi.astype(jnp.int32).reshape(1, *_BLOCK_2D)
+    seen_ref[...] = seen.astype(jnp.int32).reshape(1, *_BLOCK_2D)
+
+
+@functools.partial(jax.jit, static_argnames=("width", "interpret"))
+def decode_stream_blocks(words32, tok_off, nbits, anchor, *,
+                         width: int, interpret: bool = True):
+    """Batched page-stream decode (one launch for many concatenated pages).
+
+    ``words32``: (n_words,) int32 — LE uint32 view of the packed streams,
+    ``n_words % 128 == 0`` with >= 2 trailing spill words. ``tok_off`` /
+    ``nbits`` / ``anchor``: (n_blocks, STREAM_BLOCK) int32; padding tail
+    elements must be anchors so they cannot leak into real segments.
+    Returns the decoded W-bit patterns flattened to (n_blocks*STREAM_BLOCK,):
+    float32 (bitcast on-device) for ``width == 32``, else (lo, hi) int32
+    limbs. Bit-identical to ``ref.decode_stream_ref``.
+    """
+    n_blocks = tok_off.shape[0]
+    wr = words32.reshape(-1, 128)
+    o2 = tok_off.reshape(n_blocks, *_BLOCK_2D)
+    n2 = nbits.reshape(n_blocks, *_BLOCK_2D)
+    a2 = anchor.reshape(n_blocks, *_BLOCK_2D)
+    outs = pl.pallas_call(
+        _stream_decode_kernel,
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec(wr.shape, lambda b: (0, 0)),  # whole words array
+            pl.BlockSpec((1, *_BLOCK_2D), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, *_BLOCK_2D), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, *_BLOCK_2D), lambda b: (b, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, *_BLOCK_2D), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, *_BLOCK_2D), lambda b: (b, 0, 0)),
+            pl.BlockSpec((1, *_BLOCK_2D), lambda b: (b, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_blocks, *_BLOCK_2D), jnp.int32),
+            jax.ShapeDtypeStruct((n_blocks, *_BLOCK_2D), jnp.int32),
+            jax.ShapeDtypeStruct((n_blocks, *_BLOCK_2D), jnp.int32),
+        ],
+        interpret=interpret,
+    )(wr, o2, n2, a2)
+    lo = outs[0].reshape(n_blocks, STREAM_BLOCK).astype(jnp.uint32)
+    hi = outs[1].reshape(n_blocks, STREAM_BLOCK).astype(jnp.uint32)
+    seen = outs[2].reshape(n_blocks, STREAM_BLOCK) != 0
+    # Carry stitch: block b inherits the running value of the last anchor
+    # segment before it — an exclusive segmented combine of the per-block
+    # summaries (each block's last scanned element + "block saw an anchor").
+    ilo, ihi, _ = jax.lax.associative_scan(
+        seg_combine, (lo[:, -1], hi[:, -1], seen[:, -1]))
+    clo = jnp.concatenate([jnp.zeros(1, jnp.uint32), ilo[:-1]])
+    chi = jnp.concatenate([jnp.zeros(1, jnp.uint32), ihi[:-1]])
+    slo = lo + clo[:, None]
+    carry = (slo < lo).astype(jnp.uint32)
+    shi = hi + chi[:, None] + carry
+    flo = jnp.where(seen, lo, slo).reshape(-1)
+    fhi = jnp.where(seen, hi, shi).reshape(-1)
+    if width == 32:
+        return jax.lax.bitcast_convert_type(flo.astype(jnp.int32), jnp.float32)
+    return flo.astype(jnp.int32), fhi.astype(jnp.int32)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))

@@ -3,6 +3,11 @@
 Handles arbitrary-length inputs (padding with the last element — zero deltas
 are free), Pallas/ref dispatch, and host-side stream compaction to a compact
 byte format (used by checkpoint compression, :mod:`repro.train.checkpoint`).
+
+Also home of the *page-stream* decode entry points (:func:`decode_pages`,
+:func:`build_page_stream`): batched on-device execution of the paper-exact
+FP-delta page format, consumed by ``SpatialParquetReader.read_columnar(
+device="jax")``.
 """
 
 from __future__ import annotations
@@ -14,8 +19,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.fp_delta import HEADER_BITS, FPDeltaPlan, fp_delta_execute
+
 from . import kernel, ref
-from .ref import EXC_BITS, MAX_EXC, MINIBLOCK
+from .ref import EXC_BITS, MAX_EXC, MINIBLOCK, STREAM_BLOCK
 
 _MAGIC = b"FPD2"  # FP-Delta Miniblock v2 (patched)
 
@@ -140,6 +147,197 @@ def from_bytes(buf: bytes) -> MiniblockStream:
         jnp.asarray(exc_idx), jnp.asarray(exc_val), jnp.asarray(counts),
         n_values,
     )
+
+
+# ------------------------------------------------------ page-stream decoding
+# Batched on-device execution of host-resolved FPDeltaPlans (the paper-exact
+# page format of core/fp_delta.py). The host has already done the sequential
+# part — escape resolution — so many pages concatenate into one flat value
+# stream: per-value token bit offsets, token widths, and anchor flags, with
+# the anchor flags doubling as the segment-id boundaries of the device-side
+# segmented cumsum. One launch decodes a whole row group.
+
+# Per-launch cap on packed payload bits. Two constraints: token offsets are
+# int32 bit addresses (< 2^31), and the kernel stages the whole word buffer
+# into VMEM each grid step, so one launch's words must fit comfortably in
+# ~16 MiB of VMEM. 2^26 bits = 8 MiB of words; typical row groups are far
+# smaller and still decode in a single launch.
+_MAX_LAUNCH_BITS = 1 << 26
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def _pow2_bucket(x: int, floor: int) -> int:
+    """Next power of two >= max(x, floor): stabilizes jit cache shapes."""
+    n = max(int(x), int(floor))
+    return 1 << (n - 1).bit_length()
+
+
+@dataclass
+class PageStream:
+    """Many pages concatenated into one device-decodable value stream."""
+
+    words32: np.ndarray   # (n_words,) int32, n_words % 128 == 0, >= 2 spill words
+    tok_off: np.ndarray   # (n_blocks, STREAM_BLOCK) int32 token bit offsets
+    nbits: np.ndarray     # (n_blocks, STREAM_BLOCK) int32 token widths [1, 64]
+    anchor: np.ndarray    # (n_blocks, STREAM_BLOCK) int32 0/1 (padding = 1)
+    width: int            # 32 or 64 (uniform across the stream)
+    counts: tuple[int, ...]  # per-page value counts (output split points)
+
+    @property
+    def n_values(self) -> int:
+        return sum(self.counts)
+
+
+def build_page_stream(plans) -> PageStream:
+    """Concatenate resolved plans into one :class:`PageStream`.
+
+    Page payloads are placed word-aligned in a shared uint32 buffer; each
+    value becomes either an *anchor* (page first value, escaped raw value,
+    or any raw-mode value — token width W, starts a segment) or an inline
+    n-bit delta token. Total payload must stay under ``_MAX_LAUNCH_BITS``
+    (use :func:`decode_pages`, which chunks automatically).
+    """
+    plans = list(plans)
+    widths = {p.width for p in plans if p.n_values}
+    if len(widths) > 1:
+        raise ValueError(f"mixed widths in one page stream: {sorted(widths)}")
+    width = widths.pop() if widths else 32
+
+    word_base = 0  # uint64 words placed so far
+    wparts: list[np.ndarray] = []
+    offp: list[np.ndarray] = []
+    nbp: list[np.ndarray] = []
+    anchp: list[np.ndarray] = []
+    counts: list[int] = []
+    for p in plans:
+        counts.append(p.n_values)
+        if p.n_values == 0:
+            continue
+        base_bit = word_base * 64
+        w = p.words[:-1]  # drop the all-zero spill word; re-guarded globally
+        cnt, W = p.n_values, p.width
+        if p.n == 0:  # raw mode: every value a W-bit anchor
+            off = base_bit + HEADER_BITS + W * np.arange(cnt, dtype=np.int64)
+            nb = np.full(cnt, W, np.int64)
+            an = np.ones(cnt, np.int64)
+        else:
+            off = np.empty(cnt, np.int64)
+            nb = np.empty(cnt, np.int64)
+            an = np.zeros(cnt, np.int64)
+            off[0], nb[0], an[0] = base_bit + HEADER_BITS, W, 1
+            if cnt > 1:
+                # escaped deltas read the raw value after the marker
+                off[1:] = base_bit + np.where(p.flags, p.offsets + p.n, p.offsets)
+                nb[1:] = np.where(p.flags, W, p.n)
+                an[1:] = p.flags
+        offp.append(off)
+        nbp.append(nb)
+        anchp.append(an)
+        word_base += len(w)
+        wparts.append(w)
+
+    total_bits = word_base * 64
+    if total_bits > _MAX_LAUNCH_BITS:
+        raise ValueError(
+            f"page stream of {total_bits} bits exceeds the per-launch cap "
+            f"of {_MAX_LAUNCH_BITS}; use decode_pages, which chunks pages "
+            "across launches and host-decodes oversized single pages")
+
+    words64 = np.concatenate(wparts) if wparts else np.zeros(0, np.uint64)
+    # LE uint32 view keeps the bit layout: stream bit b = bit b%32 of word b//32
+    words32 = np.ascontiguousarray(words64).view("<u4")
+    nw = _pow2_bucket(_round_up(len(words32) + 2, 128), 128)
+    wbuf = np.zeros(nw, np.uint32)
+    wbuf[: len(words32)] = words32
+
+    n = int(sum(counts))
+    n_blocks = _pow2_bucket(-(-max(n, 1) // STREAM_BLOCK), 1)
+    pad = n_blocks * STREAM_BLOCK
+    off_a = np.zeros(pad, np.int64)
+    nb_a = np.full(pad, width, np.int64)   # padding: W-bit anchors at bit 0
+    an_a = np.ones(pad, np.int64)
+    if n:
+        off_a[:n] = np.concatenate(offp)
+        nb_a[:n] = np.concatenate(nbp)
+        an_a[:n] = np.concatenate(anchp)
+    shape = (n_blocks, STREAM_BLOCK)
+    return PageStream(
+        wbuf.view(np.int32),
+        off_a.astype(np.int32).reshape(shape),
+        nb_a.astype(np.int32).reshape(shape),
+        an_a.astype(np.int32).reshape(shape),
+        width, tuple(counts),
+    )
+
+
+_ref_decode_stream = jax.jit(
+    ref.decode_stream_ref, static_argnames=("width",))
+
+
+def decode_page_stream(stream: PageStream, *, use_pallas: bool = True,
+                       interpret: bool | None = None) -> np.ndarray:
+    """Decode a built stream; returns the concatenated values (float32 for
+    W=32, float64 for W=64 — the f64 bitcast is a host-side view of the
+    device-produced limbs). Bit-identical to the host ``fp_delta_decode``."""
+    n = stream.n_values
+    dtype = np.float32 if stream.width == 32 else np.float64
+    if n == 0:
+        return np.zeros(0, dtype)
+    args = (jnp.asarray(stream.words32), jnp.asarray(stream.tok_off),
+            jnp.asarray(stream.nbits), jnp.asarray(stream.anchor))
+    if use_pallas:
+        interp = _default_interpret() if interpret is None else interpret
+        out = kernel.decode_stream_blocks(
+            *args, width=stream.width, interpret=interp)
+    else:
+        out = _ref_decode_stream(*args, width=stream.width)
+    if stream.width == 32:
+        return np.asarray(out)[:n]
+    lo, hi = out
+    bits = (np.asarray(hi).view(np.uint32).astype(np.uint64) << np.uint64(32)) | \
+        np.asarray(lo).view(np.uint32).astype(np.uint64)
+    return bits[:n].view(np.float64)
+
+
+def decode_pages(plans, *, use_pallas: bool = True,
+                 interpret: bool | None = None) -> list[np.ndarray]:
+    """Decode many host-resolved pages on-device; one array per plan.
+
+    Pages are greedily packed into as few VMEM-sized launches as possible
+    (one launch for a typical row group). A single page too large for any
+    launch falls back to the host ``fp_delta_execute`` — same bits either
+    way. Results are bit-identical to the host decode on every page.
+    """
+    plans = list(plans)
+    out: list[np.ndarray] = []
+
+    def flush(chunk: list[FPDeltaPlan]) -> None:
+        if not chunk:
+            return
+        stream = build_page_stream(chunk)
+        vals = decode_page_stream(
+            stream, use_pallas=use_pallas, interpret=interpret)
+        out.extend(np.split(vals, np.cumsum(stream.counts)[:-1]))
+
+    chunk: list[FPDeltaPlan] = []
+    bits = 0
+    for p in plans:
+        pbits = (len(p.words) - 1) * 64
+        if pbits > _MAX_LAUNCH_BITS:  # one giant page: host-decode it
+            flush(chunk)
+            chunk, bits = [], 0
+            out.append(fp_delta_execute(p))
+            continue
+        if chunk and bits + pbits > _MAX_LAUNCH_BITS:
+            flush(chunk)
+            chunk, bits = [], 0
+        chunk.append(p)
+        bits += pbits
+    flush(chunk)
+    return out
 
 
 def compress_array(x: np.ndarray, **kw) -> bytes:

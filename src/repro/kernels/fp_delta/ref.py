@@ -214,6 +214,117 @@ def decode_blocks_ref(packed, widths, anchors, exc_idx, exc_val, exc_count):
                                        exc_idx, exc_val, exc_count)
 
 
+# --------------------------------------------------------------- page stream
+# The second codec in this package: on-device execution of the *paper-exact*
+# FP-delta format (core/fp_delta.py), as opposed to the TPU-native miniblock
+# format above. The host resolves escapes into an FPDeltaPlan; many pages are
+# then concatenated into one value stream where every value is either an
+# *anchor* (a raw W-bit pattern: a page's first value, an escaped reset
+# value, or every value of a raw-mode page) or an inline n-bit zigzag delta.
+# Decode = fixed-width gather + escape injection + segmented cumsum over the
+# anchor-delimited segments + un-zigzag + float bitcast. All arithmetic is
+# uint32 *limb pairs* (lo, hi) so W=64 streams decode without 64-bit lanes
+# (TPUs have none; interpret mode needs no jax_enable_x64).
+
+STREAM_BLOCK = 1024  # values per grid step of the stream kernel, one VPU tile
+
+
+def gather_tokens(words_u32: jnp.ndarray, offs: jnp.ndarray, nbits: jnp.ndarray):
+    """Gather token bits ``[offs, offs+nbits)`` from the LE word stream.
+
+    Returns ``(lo, hi)`` uint32 limbs. ``nbits`` must be in [1, 64] and
+    ``words_u32`` must carry >= 2 trailing spill words so the three-word
+    window ``w0i .. w0i+2`` is always in bounds.
+    """
+    words = words_u32.astype(jnp.uint32)
+    w0i = offs >> 5
+    w0 = jnp.take(words, w0i, mode="clip")
+    w1 = jnp.take(words, w0i + 1, mode="clip")
+    w2 = jnp.take(words, w0i + 2, mode="clip")
+    s = (offs & 31).astype(jnp.uint32)
+    inv = (jnp.uint32(32) - s) & jnp.uint32(31)  # shift-by-32 is UB: mask + select
+    lo = (w0 >> s) | jnp.where(s == 0, jnp.uint32(0), w1 << inv)
+    hi = (w1 >> s) | jnp.where(s == 0, jnp.uint32(0), w2 << inv)
+    full = jnp.uint32(0xFFFFFFFF)
+    nlo = jnp.clip(nbits, 1, 32).astype(jnp.uint32)
+    mask_lo = full >> (jnp.uint32(32) - nlo)  # exponent in [0, 31]: safe
+    nhi = jnp.clip(nbits - 32, 0, 32).astype(jnp.uint32)
+    mask_hi = jnp.where(
+        nhi == 0, jnp.uint32(0), full >> ((jnp.uint32(32) - nhi) & jnp.uint32(31))
+    )
+    return lo & mask_lo, hi & mask_hi
+
+
+def unzigzag_limbs(lo: jnp.ndarray, hi: jnp.ndarray):
+    """64-bit unzigzag ``(z >>> 1) ^ -(z & 1)`` on uint32 limb pairs."""
+    neg = jnp.uint32(0) - (lo & jnp.uint32(1))  # all-ones when LSB set
+    zlo = (lo >> jnp.uint32(1)) | (hi << jnp.uint32(31))
+    zhi = hi >> jnp.uint32(1)
+    return zlo ^ neg, zhi ^ neg
+
+
+def add_limbs(alo, ahi, blo, bhi):
+    """Wrapping 64-bit add with carry propagation between uint32 limbs."""
+    slo = alo + blo
+    carry = (slo < blo).astype(jnp.uint32)
+    return slo, ahi + bhi + carry
+
+
+def seg_combine(a, b):
+    """Associative combine of the segmented cumsum; ``b`` is the *later*
+    operand: an anchor in ``b`` blocks ``a``'s contribution entirely.
+    Elements are ``(lo, hi, is_anchor)``; identity is ``(0, 0, False)``."""
+    alo, ahi, af = a
+    blo, bhi, bf = b
+    slo, shi = add_limbs(alo, ahi, blo, bhi)
+    return jnp.where(bf, blo, slo), jnp.where(bf, bhi, shi), af | bf
+
+
+def stream_values(lo: jnp.ndarray, hi: jnp.ndarray, anchor: jnp.ndarray):
+    """Escape injection + un-zigzag: anchors keep their raw gathered bits,
+    inline tokens become signed deltas (wrapping uint32 limbs)."""
+    dlo, dhi = unzigzag_limbs(lo, hi)
+    return jnp.where(anchor, lo, dlo), jnp.where(anchor, hi, dhi)
+
+
+def segmented_scan(vlo, vhi, flag):
+    """Inclusive Hillis–Steele segmented scan over the last axis (log-step
+    shifted combines; identity-padded on the left)."""
+    n = vlo.shape[-1]
+    f = flag
+    shift = 1
+    while shift < n:
+        z32 = jnp.zeros(vlo.shape[:-1] + (shift,), jnp.uint32)
+        zb = jnp.zeros(vlo.shape[:-1] + (shift,), jnp.bool_)
+        prev = (
+            jnp.concatenate([z32, vlo[..., :-shift]], axis=-1),
+            jnp.concatenate([z32, vhi[..., :-shift]], axis=-1),
+            jnp.concatenate([zb, f[..., :-shift]], axis=-1),
+        )
+        vlo, vhi, f = seg_combine(prev, (vlo, vhi, f))
+        shift *= 2
+    return vlo, vhi, f
+
+
+def decode_stream_ref(words_u32, tok_off, nbits, anchor, *, width: int):
+    """Pure-jnp oracle for the page-stream decode: one flat global segmented
+    scan (structurally unlike the kernel's block-local scans + carry stitch,
+    which is what makes the differential test meaningful).
+
+    Returns float32 values for ``width == 32``, or ``(lo, hi)`` int32 limb
+    arrays for ``width == 64`` (the float64 bitcast is a host-side view).
+    """
+    offs = tok_off.reshape(-1)
+    nb = nbits.reshape(-1)
+    anc = anchor.reshape(-1) != 0
+    lo, hi = gather_tokens(words_u32, offs, nb)
+    vlo, vhi = stream_values(lo, hi, anc)
+    flo, fhi, _ = segmented_scan(vlo, vhi, anc)
+    if width == 32:
+        return jax.lax.bitcast_convert_type(flo.astype(jnp.int32), jnp.float32)
+    return flo.astype(jnp.int32), fhi.astype(jnp.int32)
+
+
 def payload_words(widths: jnp.ndarray) -> jnp.ndarray:
     """Valid packed word count per block (for stream compaction)."""
     return (widths.astype(jnp.int32) * MINIBLOCK) // 32

@@ -124,6 +124,37 @@ def test_out_must_match_shape_and_dtype():
         fp_delta_decode(p, 8, np.float64, out=np.empty(16, np.float64)[::2])
 
 
+def test_out_validated_before_payload_parse():
+    # a bad out= buffer must raise ValueError even when the payload is
+    # garbage or empty — validation happens before any byte is parsed
+    with pytest.raises(ValueError):
+        fp_delta_decode(b"", 0, np.float64, out=np.empty(3, np.float64))
+    with pytest.raises(ValueError):
+        fp_delta_decode(b"\xff", 2, np.float64, out=np.empty(2, np.int64))
+    with pytest.raises(ValueError):
+        fp_delta_decode(b"\xff", 2, np.float64, out=np.empty((2, 1), np.float64))
+
+
+def test_decode_page_raw_out_strict():
+    # regression: the raw-page out= path used to silently value-cast a
+    # wrong-dtype buffer (e.g. float32 <- float64) instead of raising
+    vals = np.arange(6, dtype=np.float64)
+    buf, _ = encode_page(vals, "raw", "none")
+    meta = PageMeta(offset=0, nbytes=len(buf), count=6, rec_start=0,
+                    rec_count=6, vmin=0.0, vmax=5.0, encoding="raw",
+                    n_bits=0, n_resets=0)
+    with pytest.raises(ValueError):
+        decode_page(buf, meta, np.float64, "none", out=np.empty(6, np.float32))
+    with pytest.raises(ValueError):
+        decode_page(buf, meta, np.float64, "none", out=np.empty(5, np.float64))
+    with pytest.raises(ValueError):
+        decode_page(buf, meta, np.float64, "none",
+                    out=np.empty(12, np.float64)[::2])
+    out = np.empty(6, np.float64)
+    assert decode_page(buf, meta, np.float64, "none", out=out) is out
+    assert np.array_equal(out, vals)
+
+
 def test_decode_into_slice_of_larger_buffer(rng):
     x = np.round(np.cumsum(rng.normal(0, 1e-4, 1000)), 6)
     p, _ = fp_delta_encode(x)
