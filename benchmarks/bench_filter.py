@@ -1,6 +1,13 @@
 """Paper Figure 11: light-weight spatial index — read time & pages pruned for
 no filter / small range (~0.01% of area) / large range (~1%).
 
+Each indexed Spatial Parquet query is timed twice: host refinement
+(``refine=True``) and the fused on-device decode→bbox-refine path
+(``refine=True, device="jax"`` — Pallas interpret mode off-TPU, so treat it
+as a correctness-plane trajectory there). A second table (``SWEEP``) runs
+the record-selectivity sweep (~1% / ~10% / ~50% retained) used by the CI
+smoke bench, at full benchmark scale.
+
 Also reports GeoParquet-like page pruning (the paper notes it has "similar
 benefit" through its MBR columns) for comparison."""
 
@@ -15,6 +22,7 @@ from repro.core.reader import SpatialParquetReader
 from repro.core.writer import write_file
 
 from .common import dataset_geometries, make_dataset, timer, tmppath
+from .smoke import SWEEP_TARGETS, selectivity_bbox
 
 
 def _query_boxes(cols, area_fracs):
@@ -51,6 +59,36 @@ def run(scale: float = 1.0, datasets=("PT", "eB")) -> list[dict]:
                 bytes_read=st.bytes_read, bytes_total=st.bytes_total,
                 records=st.records_returned,
             ))
+            if boxes[qname] is not None:
+                # fused on-device refinement (warm-up compiles off the clock)
+                r.read_columnar(bbox=boxes[qname], refine=True, device="jax")
+                with timer() as t:
+                    _, _, std = r.read_columnar(
+                        bbox=boxes[qname], refine=True, device="jax")
+                rows.append(dict(
+                    table="F11", dataset=ds, fmt="spatialparquet-devrefine",
+                    query=qname, s=t["s"], pages_read=std.pages_read,
+                    pages_total=std.pages_total, bytes_read=std.bytes_read,
+                    bytes_total=std.bytes_total, records=std.records_returned,
+                ))
+
+        # record-selectivity sweep: host vs fused device refinement
+        full, _, _ = r.read_columnar()
+        for target in SWEEP_TARGETS:
+            bbox = selectivity_bbox(full, target)
+            r.read_columnar(bbox=bbox, refine=True, device="jax")  # warm-up
+            with timer() as th:
+                r.read_columnar(bbox=bbox, refine=True)
+            with timer() as td:
+                _, _, stdv = r.read_columnar(bbox=bbox, refine=True,
+                                             device="jax")
+            rows.append(dict(
+                table="SWEEP", dataset=ds, fmt="spatialparquet",
+                query=f"sel{int(target * 100):02d}", s=th["s"],
+                device_refine_s=td["s"],
+                selectivity=round(stdv.records_returned / max(full.n_records, 1), 4),
+                records=stdv.records_returned,
+            ))
         r.close()
         os.unlink(p)
 
@@ -74,8 +112,15 @@ def run(scale: float = 1.0, datasets=("PT", "eB")) -> list[dict]:
 def summarize(rows) -> list[str]:
     out = ["# Figure 11: indexed range reads (pages read/total, seconds)"]
     for r in rows:
-        out.append(
-            f"F11 {r['dataset']}/{r['fmt']}/{r['query']}: {r['s']:.3f}s "
-            f"pages={r['pages_read']}/{r['pages_total']} records={r.get('records','-')}"
-        )
+        if r["table"] == "SWEEP":
+            out.append(
+                f"SWEEP {r['dataset']}/{r['query']}: host {r['s']:.3f}s "
+                f"device {r['device_refine_s']:.3f}s "
+                f"selectivity={r['selectivity']} records={r['records']}"
+            )
+        else:
+            out.append(
+                f"F11 {r['dataset']}/{r['fmt']}/{r['query']}: {r['s']:.3f}s "
+                f"pages={r['pages_read']}/{r['pages_total']} records={r.get('records','-')}"
+            )
     return out

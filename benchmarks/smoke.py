@@ -6,15 +6,19 @@ baseline::
 
     PYTHONPATH=src python -m benchmarks.smoke [--scale 0.25] [--out BENCH_read.json]
 
-Reported fields: ``write_s``, ``read_columnar_s`` (coalesced fast path),
-``read_columnar_legacy_s`` (one read per blob, same decode),
-``device_decode_s`` (``device="jax"`` page-stream decode — Pallas interpret
-mode off-TPU, so this is a correctness-plane number in CI), ``file_bytes``,
-``raw_coord_bytes``, ``n_records``, ``n_values``, plus the sharded-dataset
-trajectory: ``dataset_write_s``, ``dataset_scan_s`` (async full scan over
-``dataset_n_shards`` shards), ``dataset_scan_bbox_s`` and its pruning ratio
-``dataset_bbox_bytes_read``/``dataset_bytes_total``. Timings are best-of-N
-to shrink scheduler noise.
+Reported fields: ``write_s``, ``read_columnar_s`` (coalesced fast path,
+double-buffered row groups), ``read_columnar_legacy_s`` (one read per blob,
+same decode), ``device_decode_s`` (``device="jax"`` page-stream decode),
+``device_refine_s`` (fused on-device decode→bbox-refine at ~50% record
+selectivity) and ``refine_sweep`` — host vs fused device refinement at ~1%,
+~10% and ~50% record selectivity with the measured selectivity per box.
+Off-TPU the kernels run in Pallas interpret mode, so the device numbers are
+correctness-plane trajectories in CI, not speedups. Also recorded:
+``file_bytes``, ``raw_coord_bytes``, ``n_records``, ``n_values``, plus the
+sharded-dataset trajectory: ``dataset_write_s``, ``dataset_scan_s`` (async
+full scan over ``dataset_n_shards`` shards), ``dataset_scan_bbox_s`` and its
+pruning ratio ``dataset_bbox_bytes_read``/``dataset_bytes_total``. Timings
+are best-of-N to shrink scheduler noise.
 """
 
 from __future__ import annotations
@@ -27,11 +31,29 @@ import shutil
 import tempfile
 import time
 
+import numpy as np
+
 from repro.core.reader import SpatialParquetReader
 from repro.core.writer import write_file
 from repro.dataset import SpatialDatasetScanner, write_dataset
 
 from .common import SCALE_1, make_dataset, tmppath
+
+# record-selectivity targets of the fused-refine sweep (fraction of records
+# a central quantile box should retain)
+SWEEP_TARGETS = (0.01, 0.10, 0.50)
+
+
+def selectivity_bbox(geo, frac: float):
+    """A central bbox retaining roughly ``frac`` of the records: quantile
+    span of sqrt(frac) per axis around the median."""
+    x = np.asarray(geo.x, np.float64)
+    y = np.asarray(geo.y, np.float64)
+    side = float(np.sqrt(frac)) / 2.0
+    return (
+        float(np.quantile(x, 0.5 - side)), float(np.quantile(y, 0.5 - side)),
+        float(np.quantile(x, 0.5 + side)), float(np.quantile(y, 0.5 + side)),
+    )
 
 
 def run(scale: float = 0.25, dataset: str = "PT", repeats: int = 3,
@@ -58,6 +80,32 @@ def run(scale: float = 0.25, dataset: str = "PT", repeats: int = 3,
                 for _ in range(repeats)
             )
             geo, _, stats = r.read_columnar()
+
+            # fused decode→refine selectivity sweep (host vs device)
+            refine_sweep = []
+            for target in SWEEP_TARGETS:
+                bbox = selectivity_bbox(geo, target)
+                # warm-up compiles this bucket off the clock
+                _, _, dstats_r = r.read_columnar(
+                    bbox=bbox, refine=True, device="jax")
+                host_s = min(
+                    _timed(lambda: r.read_columnar(bbox=bbox, refine=True))
+                    for _ in range(repeats)
+                )
+                dev_s = min(
+                    _timed(lambda: r.read_columnar(
+                        bbox=bbox, refine=True, device="jax"))
+                    for _ in range(repeats)
+                )
+                refine_sweep.append({
+                    "target": target,
+                    "selectivity": round(
+                        dstats_r.records_returned / max(geo.n_records, 1), 4),
+                    "host_refine_s": round(host_s, 6),
+                    "device_refine_s": round(dev_s, 6),
+                    "records": dstats_r.records_returned,
+                })
+            device_refine_s = refine_sweep[-1]["device_refine_s"]
 
         # sharded dataset: async full scan + shard-pruned bbox scan
         dataset_write_s = min(
@@ -86,6 +134,8 @@ def run(scale: float = 0.25, dataset: str = "PT", repeats: int = 3,
         "read_columnar_s": round(read_s, 6),
         "read_columnar_legacy_s": round(read_legacy_s, 6),
         "device_decode_s": round(device_decode_s, 6),
+        "device_refine_s": device_refine_s,
+        "refine_sweep": refine_sweep,
         "file_bytes": file_bytes,
         "raw_coord_bytes": int(cols.n_values) * 2 * cols.x.dtype.itemsize,
         "bytes_read": stats.bytes_read,

@@ -39,8 +39,69 @@ from .geometry import (
 
 
 @dataclass
+class DeviceCoords:
+    """A device-resident coordinate column (the ``keep_on_device`` form).
+
+    Holds the decoded IEEE-754 bit patterns as uint32 limb arrays living on
+    the accelerator (``hi`` is None for 32-bit coordinates) — the exact
+    output of the fused device scan, with **zero host transfer** until
+    :meth:`to_numpy` is called. This module stays jax-free; the fields are
+    duck-typed device arrays produced by ``repro.kernels.fp_delta``.
+    """
+
+    lo: object                  # (n,) uint32 device array
+    hi: object | None           # (n,) uint32 device array, None for 32-bit
+    dtype: np.dtype
+
+    def __len__(self) -> int:
+        return int(self.lo.shape[0])
+
+    def to_numpy(self) -> np.ndarray:
+        """Transfer to host and bitcast to the coordinate dtype."""
+        lo = np.asarray(self.lo)
+        if self.hi is None:
+            return lo.view(self.dtype)
+        bits = (np.asarray(self.hi).astype(np.uint64) << np.uint64(32)) | lo
+        return bits.view(self.dtype)
+
+    @staticmethod
+    def from_numpy(arr: np.ndarray) -> "DeviceCoords":
+        """Upload a host coordinate array as limb pairs (inverse of
+        :meth:`to_numpy`; used when a host-decoded chunk joins a
+        device-resident result)."""
+        import jax.numpy as jnp
+
+        arr = np.ascontiguousarray(arr)
+        if arr.dtype.itemsize == 4:
+            return DeviceCoords(jnp.asarray(arr.view(np.uint32)), None, arr.dtype)
+        bits = arr.view(np.uint64)
+        lo = (bits & np.uint64(0xFFFFFFFF)).astype(np.uint32)
+        hi = (bits >> np.uint64(32)).astype(np.uint32)
+        return DeviceCoords(jnp.asarray(lo), jnp.asarray(hi), arr.dtype)
+
+    @staticmethod
+    def concat(parts: list["DeviceCoords"]) -> "DeviceCoords":
+        """Device-side concatenation (no host round-trip)."""
+        if len(parts) == 1:
+            return parts[0]
+        import jax.numpy as jnp  # device parts exist, so jax is loaded
+
+        lo = jnp.concatenate([p.lo for p in parts])
+        hi = (None if parts[0].hi is None
+              else jnp.concatenate([p.hi for p in parts]))
+        return DeviceCoords(lo, hi, parts[0].dtype)
+
+
+@dataclass
 class GeometryColumns:
-    """The shredded (columnar) form of a geometry column chunk."""
+    """The shredded (columnar) form of a geometry column chunk.
+
+    ``x``/``y`` are host numpy arrays on every default path; the fused
+    device scan (``read_columnar(..., keep_on_device=True)``) returns them
+    as :class:`DeviceCoords` instead — structural methods (record counts,
+    level slicing) keep working, value-level APIs need
+    :meth:`coords_to_host` first.
+    """
 
     types: np.ndarray      # uint8, one per sub-geometry
     type_rep: np.ndarray   # uint8 {0,1}, one per sub-geometry
@@ -48,6 +109,13 @@ class GeometryColumns:
     defn: np.ndarray       # uint8 {0,1}, one per slot
     x: np.ndarray          # float64/float32, one per value slot (defn==1)
     y: np.ndarray
+
+    def coords_to_host(self) -> "GeometryColumns":
+        """Materialize device-resident coordinates (no-op for host arrays)."""
+        if not isinstance(self.x, DeviceCoords):
+            return self
+        return GeometryColumns(self.types, self.type_rep, self.rep, self.defn,
+                               self.x.to_numpy(), self.y.to_numpy())
 
     @property
     def n_records(self) -> int:

@@ -19,7 +19,11 @@ try:
 except ImportError:  # pragma: no cover - zstd optional
     _zstd = None
 
+from .bitstream import bytes_to_words
 from .fp_delta import (
+    _EMPTY_FLAGS,
+    _EMPTY_OFFS,
+    HEADER_BITS,
     FPDeltaPlan,
     _check_out,
     fp_delta_decode,
@@ -169,6 +173,37 @@ def page_plan(buf, meta: PageMeta, dtype, codec: str) -> FPDeltaPlan:
     if meta.encoding != ENC_FP_DELTA:
         raise ValueError(f"page_plan requires fp_delta pages, got {meta.encoding!r}")
     return fp_delta_plan(decompress(buf, codec), meta.count, dtype)
+
+
+def page_stream_plan(buf, meta: PageMeta, dtype, codec: str) -> FPDeltaPlan:
+    """Like :func:`page_plan`, but accepts **every** coordinate encoding.
+
+    Raw pages are mapped onto a *synthetic raw-mode plan* — a zero byte
+    (standing in for the fp_delta ``n* = 0`` header) prepended to the stored
+    values, so every value sits at ``HEADER_BITS + i * W`` exactly like a
+    raw-mode fp_delta payload. The device page-stream decode then treats
+    both encodings uniformly (each value a W-bit anchor), which is what lets
+    the fused decode→refine path cover whole row groups regardless of how
+    individual pages were encoded. Bit-identical to ``np.frombuffer`` on the
+    payload (little-endian word math either way).
+    """
+    if meta.encoding == ENC_FP_DELTA:
+        return page_plan(buf, meta, dtype, codec)
+    if meta.encoding != ENC_RAW:
+        raise ValueError(f"unknown encoding {meta.encoding!r}")
+    dtype = np.dtype(dtype)
+    width = dtype.itemsize * 8
+    if width not in (32, 64):
+        raise TypeError(f"unsupported dtype {dtype}")
+    payload = decompress(buf, codec)
+    if meta.count == 0:
+        return FPDeltaPlan(dtype, width, 0, 0, 0, np.zeros(1, np.uint64),
+                           _EMPTY_OFFS, _EMPTY_FLAGS, 0)
+    shifted = bytearray(1 + len(payload))
+    shifted[1:] = payload
+    assert HEADER_BITS == 8, "synthetic raw plan assumes a one-byte header"
+    return FPDeltaPlan(dtype, width, 0, meta.count, 0, bytes_to_words(shifted),
+                       _EMPTY_OFFS, _EMPTY_FLAGS, 0)
 
 
 def encode_pages(

@@ -23,6 +23,13 @@ preallocated buffer. Individual blobs are then zero-copy ``memoryview``
 slices of those buffers. For a full-file scan of one row group this is a
 single read syscall for the whole group.
 
+Row groups are **double-buffered** (``prefetch_row_groups``, default 1): a
+single reader thread issues row group N+1's coalesced reads while the main
+thread decodes row group N from already-filled buffers, so intra-file I/O
+overlaps decode exactly like the dataset scanner overlaps shards. Results
+are byte-identical to the sequential order (``prefetch_row_groups=0``
+disables the overlap; ``coalesce=False`` implies it).
+
 Decoding is allocation-lean to match: the total hit value count is known from
 the index, so the x/y (and extra) destination arrays are preallocated once
 and every page decodes straight into its slice via the ``out=`` contract of
@@ -43,21 +50,46 @@ concatenated into one Pallas page-stream launch
 the host path (asserted by tests/test_device_decode.py); raw-encoded pages,
 level streams, and extra columns stay on the host. Off-TPU the kernels run
 in interpret mode, so the full path is exercised in CPU CI.
+
+Fused device refinement (``device="jax", refine=True``)
+-------------------------------------------------------
+
+With both flags set, refinement runs *where the data decodes*: the same
+launch chain appends a segmented per-record min/max (``repro.kernels.minmax``
+over IEEE-754 order keys — uint32 limb math, so float64 refines without
+``jax_enable_x64``) and the bbox survivor test
+(``repro.kernels.fp_delta.decode_refine_stream``). Pruned records **never
+materialize on the host**: only the record mask and the surviving
+coordinates cross back (raw-encoded pages join the launch through a
+synthetic raw-mode plan, see ``pages.page_stream_plan``). The surviving
+record set is bit-identical to the host refine. ``keep_on_device=True``
+additionally leaves the surviving coordinates on the accelerator, returning
+:class:`~repro.core.columnar.DeviceCoords` columns for zero-copy handoff
+into downstream device consumers (``repro.data.pipeline``).
 """
 
 from __future__ import annotations
 
 import struct
 from bisect import bisect_right
+from collections import deque
 from dataclasses import dataclass
 
 import msgpack
 import numpy as np
 
-from .columnar import GeometryColumns, assemble
+from .columnar import DeviceCoords, GeometryColumns, assemble
+from .fp_delta import fp_delta_execute
 from .geometry import Geometry
 from .index import SpatialIndex
-from .pages import ENC_FP_DELTA, PageMeta, decode_page, decompress, page_plan
+from .pages import (
+    ENC_FP_DELTA,
+    PageMeta,
+    decode_page,
+    decompress,
+    page_plan,
+    page_stream_plan,
+)
 from .rle import decode_levels, rle_decode
 from .writer import MAGIC, permute_records
 
@@ -177,10 +209,60 @@ class _DirectRanges:
         return self._fh.read(nbytes)
 
 
+@dataclass
+class _RowGroupLevels:
+    """Decoded level streams of one row group + record start indices.
+
+    Owns the record-range slicing shared by the host and fused read loops,
+    so the two paths can never drift apart on level semantics (their
+    bit-identity is part of the fused-refine contract).
+    """
+
+    types: np.ndarray
+    type_rep: np.ndarray
+    rep: np.ndarray
+    defn: np.ndarray
+    slot_starts: np.ndarray
+    type_starts: np.ndarray
+
+    @property
+    def n_rec(self) -> int:
+        return len(self.slot_starts)
+
+    def append_run(self, parts, r0: int, r1: int) -> None:
+        """Slice records ``[r0, r1)`` into the four level part lists; the
+        first slot of a run always starts a record, so the rep/type_rep
+        heads are (re)pinned to 0."""
+        types_parts, type_rep_parts, rep_parts, defn_parts = parts
+        n_rec = self.n_rec
+        s0 = self.slot_starts[r0]
+        s1 = self.slot_starts[r1] if r1 < n_rec else len(self.rep)
+        t0 = self.type_starts[r0]
+        t1 = self.type_starts[r1] if r1 < n_rec else len(self.types)
+        types_parts.append(self.types[t0:t1])
+        tr = self.type_rep[t0:t1].copy()
+        rp = self.rep[s0:s1].copy()
+        tr[0] = 0
+        rp[0] = 0
+        type_rep_parts.append(tr)
+        rep_parts.append(rp)
+        defn_parts.append(self.defn[s0:s1])
+
+    def record_value_counts(self) -> np.ndarray:
+        """Values per record across the whole row group (pages are
+        record-aligned, so hit runs slice out of this contiguously)."""
+        d64 = self.defn.astype(np.int64)
+        value_idx = np.cumsum(d64) - d64
+        total = int(value_idx[-1] + d64[-1]) if len(d64) else 0
+        return np.diff(np.append(value_idx[self.slot_starts], total))
+
+
 class SpatialParquetReader:
-    def __init__(self, path, *, coalesce_max_gap: int = 1 << 16):
+    def __init__(self, path, *, coalesce_max_gap: int = 1 << 16,
+                 prefetch_row_groups: int = 1):
         self.path = str(path)
         self.coalesce_max_gap = int(coalesce_max_gap)
+        self.prefetch_row_groups = max(0, int(prefetch_row_groups))
         self._fh = open(self.path, "rb")
         self.footer = self._read_footer()
         self.coord_dtype = np.dtype(self.footer["coord_dtype"])
@@ -215,6 +297,105 @@ class SpatialParquetReader:
     def _total_data_bytes(self) -> int:
         return footer_data_bytes(self.footer)
 
+    def _rg_ranges(self, rg, runs, base, want_geom, extra_pages):
+        """Every byte range one row group's decode needs (metadata only)."""
+        idx = self.index
+        ranges: list[tuple[int, int]] = []
+        if want_geom:
+            ranges += [
+                (rg[name]["offset"], rg[name]["nbytes"]) for name in _LEVEL_NAMES
+            ]
+        for p0, p1 in runs:
+            if want_geom:
+                j0, j1 = base + p0, base + p1 - 1
+                ranges.append((
+                    int(idx.x_offset[j0]),
+                    int(idx.x_offset[j1] + idx.x_nbytes[j1] - idx.x_offset[j0]),
+                ))
+                ranges.append((
+                    int(idx.y_offset[j0]),
+                    int(idx.y_offset[j1] + idx.y_nbytes[j1] - idx.y_offset[j0]),
+                ))
+            for ep in extra_pages.values():
+                first, last = ep[p0], ep[p1 - 1]
+                ranges.append((
+                    first["offset"],
+                    last["offset"] + last["nbytes"] - first["offset"],
+                ))
+        return ranges
+
+    def _decode_rg_levels(self, src, rg, stats: ReadStats) -> _RowGroupLevels:
+        """Decode one row group's four level streams from memory slices."""
+        types = rle_decode(
+            decompress(src.blob(rg["type"]["offset"], rg["type"]["nbytes"]),
+                       self.codec))
+        type_rep = decode_levels(
+            decompress(src.blob(rg["type_rep"]["offset"], rg["type_rep"]["nbytes"]),
+                       self.codec))
+        rep = decode_levels(
+            decompress(src.blob(rg["rep"]["offset"], rg["rep"]["nbytes"]),
+                       self.codec))
+        defn = decode_levels(
+            decompress(src.blob(rg["defn"]["offset"], rg["defn"]["nbytes"]),
+                       self.codec))
+        stats.bytes_read += sum(rg[name]["nbytes"] for name in _LEVEL_NAMES)
+        return _RowGroupLevels(types, type_rep, rep, defn,
+                               np.flatnonzero(rep == 0),
+                               np.flatnonzero(type_rep == 0))
+
+    def _decode_run_extras(self, src, extra_pages, extra_all, we: int,
+                           p0: int, p1: int, stats: ReadStats) -> None:
+        """Decode one run's extra-column pages into the preallocated columns
+        at record cursor ``we``."""
+        for k, ep in extra_pages.items():
+            wk = we
+            for p in range(p0, p1):
+                meta = PageMeta.from_dict(ep[p])
+                decode_page(
+                    src.blob(meta.offset, meta.nbytes), meta,
+                    np.dtype(self.extra_schema[k]), self.codec,
+                    out=extra_all[k][wk : wk + meta.count],
+                )
+                stats.bytes_read += meta.nbytes
+                wk += meta.count
+
+    def _iter_sources(self, items, coalesce: bool):
+        """Yield ``(item, src)`` per hit row group, double-buffering reads.
+
+        With coalescing on and ``prefetch_row_groups >= 1``, a single worker
+        thread runs row group N+1's ``readinto`` calls while the caller
+        decodes row group N (file I/O releases the GIL; the main thread only
+        touches prefilled buffers, never the file handle). Yields in file
+        order, so results are byte-identical to the sequential path.
+        """
+        if not coalesce:
+            for it in items:
+                yield it, _DirectRanges(self._fh)
+            return
+        lookahead = self.prefetch_row_groups
+        if lookahead == 0 or len(items) <= 1:
+            for it in items:
+                yield it, _CoalescedRanges(self._fh, it[-1], self.coalesce_max_gap)
+            return
+        from concurrent.futures import ThreadPoolExecutor
+
+        with ThreadPoolExecutor(max_workers=1) as pool:
+            pending: deque = deque()
+            nxt = 0
+            while nxt < len(items) and len(pending) < lookahead:
+                pending.append(pool.submit(
+                    _CoalescedRanges, self._fh, items[nxt][-1],
+                    self.coalesce_max_gap))
+                nxt += 1
+            for it in items:
+                src = pending.popleft().result()
+                if nxt < len(items):
+                    pending.append(pool.submit(
+                        _CoalescedRanges, self._fh, items[nxt][-1],
+                        self.coalesce_max_gap))
+                    nxt += 1
+                yield it, src
+
     # -------------------------------------------------------------- read API
     def read_columnar(
         self,
@@ -223,6 +404,8 @@ class SpatialParquetReader:
         refine: bool = False,
         coalesce: bool = True,
         device: str = "cpu",
+        *,
+        keep_on_device: bool = False,
     ) -> tuple[GeometryColumns | None, dict[str, np.ndarray], ReadStats]:
         """Decode records whose *page* bbox intersects ``bbox``.
 
@@ -233,14 +416,19 @@ class SpatialParquetReader:
         disables batched range I/O (one read per blob; identical results).
         ``device="jax"`` decodes surviving FP-delta coordinate pages on the
         accelerator (one Pallas page-stream launch per row group,
-        bit-identical results); ``"cpu"`` is the default and the oracle.
+        bit-identical results); combined with ``refine=True`` the per-record
+        bbox test also runs on-device and only surviving records transfer
+        back. ``keep_on_device=True`` (requires ``device="jax"``) returns
+        :class:`DeviceCoords` coordinate columns that never leave the
+        accelerator; it is a no-op when ``columns`` excludes geometry (extra
+        columns always decode on the host). ``"cpu"`` is the default and the
+        oracle.
         """
         if device not in ("cpu", "jax"):
             raise ValueError(f"device must be 'cpu' or 'jax', got {device!r}")
         use_device = device == "jax"
-        if use_device:
-            # lazy: keeps jax out of host-only read paths
-            from repro.kernels.fp_delta import decode_pages as _device_decode_pages
+        if keep_on_device and not use_device:
+            raise ValueError("keep_on_device=True requires device='jax'")
         want_geom = columns is None or "geometry" in columns
         want_extra = (
             list(self.extra_schema)
@@ -256,6 +444,33 @@ class SpatialParquetReader:
         for rg_i, p0, p1 in idx.page_runs(bbox, hit=hit):
             runs_by_rg.setdefault(rg_i, []).append((p0, p1))
             stats.pages_read += p1 - p0
+
+        # per-row-group work items: (rg_i, rg, runs, base, extra_pages, ranges)
+        items = []
+        for rg_i, rg in enumerate(self.footer["row_groups"]):
+            runs = runs_by_rg.get(rg_i)
+            if not runs:
+                continue
+            base = int(np.searchsorted(idx.row_group, rg_i, side="left"))
+            extra_pages = {k: rg["extra"][k] for k in want_extra}
+            items.append((rg_i, rg, runs, base, extra_pages,
+                          self._rg_ranges(rg, runs, base, want_geom, extra_pages)))
+
+        fused = use_device and want_geom and (
+            keep_on_device or (refine and bbox is not None)
+        )
+        if fused and refine and bbox is not None and self.coord_dtype.kind != "f":
+            if keep_on_device:
+                raise ValueError("device refinement requires float coordinates")
+            fused = False  # exotic int coords: decode on device, refine on host
+        if fused:
+            return self._read_columnar_fused(
+                bbox, refine, coalesce, keep_on_device, want_extra,
+                items, stats, hit)
+
+        if use_device:
+            # lazy: keeps jax out of host-only read paths
+            from repro.kernels.fp_delta import decode_pages as _device_decode_pages
 
         # preallocate coordinate destinations across every hit page
         total_vals = int(idx.count[hit].sum()) if len(hit) else 0
@@ -273,63 +488,12 @@ class SpatialParquetReader:
         defn_parts: list[np.ndarray] = []
         w = 0   # value write cursor into x_all / y_all
         we = 0  # record write cursor into extra columns
-        for rg_i, rg in enumerate(self.footer["row_groups"]):
-            runs = runs_by_rg.get(rg_i)
-            if not runs:
-                continue
-            base = int(np.searchsorted(idx.row_group, rg_i, side="left"))
+        level_parts = (types_parts, type_rep_parts, rep_parts, defn_parts)
+        for (rg_i, rg, runs, base, extra_pages, _ranges), src in \
+                self._iter_sources(items, coalesce):
             xp, yp = rg["x_pages"], rg["y_pages"]
-            extra_pages = {k: rg["extra"][k] for k in want_extra}
-
-            # 1. collect every byte range this row group needs
-            ranges: list[tuple[int, int]] = []
             if want_geom:
-                ranges += [
-                    (rg[name]["offset"], rg[name]["nbytes"]) for name in _LEVEL_NAMES
-                ]
-            for p0, p1 in runs:
-                if want_geom:
-                    j0, j1 = base + p0, base + p1 - 1
-                    ranges.append((
-                        int(idx.x_offset[j0]),
-                        int(idx.x_offset[j1] + idx.x_nbytes[j1] - idx.x_offset[j0]),
-                    ))
-                    ranges.append((
-                        int(idx.y_offset[j0]),
-                        int(idx.y_offset[j1] + idx.y_nbytes[j1] - idx.y_offset[j0]),
-                    ))
-                for ep in extra_pages.values():
-                    first, last = ep[p0], ep[p1 - 1]
-                    ranges.append((
-                        first["offset"],
-                        last["offset"] + last["nbytes"] - first["offset"],
-                    ))
-
-            # 2. one readinto per coalesced range
-            src = (
-                _CoalescedRanges(self._fh, ranges, self.coalesce_max_gap)
-                if coalesce
-                else _DirectRanges(self._fh)
-            )
-
-            # 3. decode from memory slices
-            if want_geom:
-                types = rle_decode(
-                    decompress(src.blob(rg["type"]["offset"], rg["type"]["nbytes"]),
-                               self.codec))
-                type_rep = decode_levels(
-                    decompress(src.blob(rg["type_rep"]["offset"], rg["type_rep"]["nbytes"]),
-                               self.codec))
-                rep = decode_levels(
-                    decompress(src.blob(rg["rep"]["offset"], rg["rep"]["nbytes"]),
-                               self.codec))
-                defn = decode_levels(
-                    decompress(src.blob(rg["defn"]["offset"], rg["defn"]["nbytes"]),
-                               self.codec))
-                stats.bytes_read += sum(rg[name]["nbytes"] for name in _LEVEL_NAMES)
-                slot_starts = np.flatnonzero(rep == 0)
-                type_starts = np.flatnonzero(type_rep == 0)
-                n_rec = len(slot_starts)
+                lv = self._decode_rg_levels(src, rg, stats)
 
             deferred: list[tuple] = []  # (plan, dest array, dest offset)
 
@@ -363,31 +527,9 @@ class SpatialParquetReader:
                     stats.bytes_read += int(
                         idx.x_nbytes[j0 : j1 + 1].sum() + idx.y_nbytes[j0 : j1 + 1].sum()
                     )
-                    s0 = slot_starts[r0]
-                    s1 = slot_starts[r1] if r1 < n_rec else len(rep)
-                    t0 = type_starts[r0]
-                    t1 = type_starts[r1] if r1 < n_rec else len(types)
-                    types_parts.append(types[t0:t1])
-                    tr = type_rep[t0:t1].copy()
-                    rp = rep[s0:s1].copy()
-                    # the first slot of a run always starts a record
-                    tr[0] = 0
-                    rp[0] = 0
-                    type_rep_parts.append(tr)
-                    rep_parts.append(rp)
-                    defn_parts.append(defn[s0:s1])
-                for k in want_extra:
-                    ep = extra_pages[k]
-                    wk = we
-                    for p in range(p0, p1):
-                        meta = PageMeta.from_dict(ep[p])
-                        decode_page(
-                            src.blob(meta.offset, meta.nbytes), meta,
-                            np.dtype(self.extra_schema[k]), self.codec,
-                            out=extra_all[k][wk : wk + meta.count],
-                        )
-                        stats.bytes_read += meta.nbytes
-                        wk += meta.count
+                    lv.append_run(level_parts, r0, r1)
+                self._decode_run_extras(src, extra_pages, extra_all, we,
+                                        p0, p1, stats)
                 we += r1 - r0
 
             if deferred:
@@ -418,27 +560,185 @@ class SpatialParquetReader:
         )
         return geo, extras, stats
 
+    # ------------------------------------------------------ fused device scan
+    def _read_columnar_fused(self, bbox, refine, coalesce, keep_on_device,
+                             want_extra, items, stats, hit):
+        """Decode → per-record bbox refine → compact, all device-resident.
+
+        Per row group: levels decode on the host (they drive segmentation),
+        every hit coordinate page becomes a plan (raw pages via the synthetic
+        raw-mode plan) and joins one fused launch chain per VMEM-sized chunk
+        (`decode_refine_stream`). Only the per-record survivor mask and the
+        surviving coordinate values cross back to the host — or nothing at
+        all with ``keep_on_device=True``.
+        """
+        from repro.kernels.fp_delta import (
+            build_page_stream,
+            build_refine_aux,
+            chunk_plan_pairs,
+            decode_refine_stream,
+            decode_stream_device,
+            gather_stream_values,
+            ragged_ranges,
+        )
+
+        idx = self.index
+        dtype = self.coord_dtype
+        width = dtype.itemsize * 8
+        do_refine = refine and bbox is not None
+
+        total_recs = int(idx.rec_count[hit].sum()) if len(hit) else 0
+        extra_all = {
+            k: np.empty(total_recs, np.dtype(self.extra_schema[k]))
+            for k in want_extra
+        }
+        types_parts: list[np.ndarray] = []
+        type_rep_parts: list[np.ndarray] = []
+        rep_parts: list[np.ndarray] = []
+        defn_parts: list[np.ndarray] = []
+        keep_parts: list[np.ndarray] = []
+        x_parts: list = []
+        y_parts: list = []
+        we = 0
+
+        level_parts = (types_parts, type_rep_parts, rep_parts, defn_parts)
+        for (rg_i, rg, runs, base, extra_pages, _ranges), src in \
+                self._iter_sources(items, coalesce):
+            xp, yp = rg["x_pages"], rg["y_pages"]
+            lv = self._decode_rg_levels(src, rg, stats)
+            rec_vcounts_rg = lv.record_value_counts()
+
+            plans: list = []            # x,y plan per page, stream order
+            pairs: list[tuple[int, int]] = []   # local record range per pair
+            vc_parts: list[np.ndarray] = []
+            local_base = 0
+            for p0, p1 in runs:
+                j0, j1 = base + p0, base + p1 - 1
+                r0 = int(idx.rec_start[j0])
+                r1 = int(idx.rec_start[j1] + idx.rec_count[j1])
+                stats.records_scanned += r1 - r0
+                for p in range(p0, p1):
+                    j = base + p
+                    plans.append(page_stream_plan(
+                        src.blob(int(idx.x_offset[j]), int(idx.x_nbytes[j])),
+                        PageMeta.from_dict(xp[p]), dtype, self.codec))
+                    plans.append(page_stream_plan(
+                        src.blob(int(idx.y_offset[j]), int(idx.y_nbytes[j])),
+                        PageMeta.from_dict(yp[p]), dtype, self.codec))
+                    lo_loc = local_base + int(idx.rec_start[j]) - r0
+                    pairs.append((lo_loc, lo_loc + int(idx.rec_count[j])))
+                stats.bytes_read += int(
+                    idx.x_nbytes[j0 : j1 + 1].sum() + idx.y_nbytes[j0 : j1 + 1].sum()
+                )
+                vc_parts.append(rec_vcounts_rg[r0:r1])
+                local_base += r1 - r0
+                lv.append_run(level_parts, r0, r1)
+                self._decode_run_extras(src, extra_pages, extra_all, we,
+                                        p0, p1, stats)
+                we += r1 - r0
+            rec_vcounts = (np.concatenate(vc_parts) if vc_parts
+                           else np.zeros(0, np.int64))
+
+            # chunk page pairs into VMEM-sized fused launches
+            for kind, cplans, cpairs, (rl, rh) in chunk_plan_pairs(plans, pairs):
+                vc = rec_vcounts[rl:rh]
+                if kind == "host":
+                    # a single page too large for any launch: decode this
+                    # pair on the host (same bits via fp_delta_execute)
+                    x_v = fp_delta_execute(cplans[0])
+                    y_v = fp_delta_execute(cplans[1])
+                    keep_c = (_bbox_keep_mask(x_v, y_v, vc, bbox)
+                              if do_refine else np.ones(len(vc), bool))
+                    starts = np.cumsum(vc) - vc
+                    iv = ragged_ranges(starts[keep_c], vc[keep_c])
+                    xs, ys = x_v[iv], y_v[iv]
+                    if keep_on_device:
+                        xs = DeviceCoords.from_numpy(xs)
+                        ys = DeviceCoords.from_numpy(ys)
+                    keep_parts.append(keep_c)
+                    x_parts.append(xs)
+                    y_parts.append(ys)
+                    continue
+                stream = build_page_stream(cplans)
+                aux = build_refine_aux(
+                    stream, [(a - rl, b - rl) for a, b in cpairs], vc)
+                if do_refine:
+                    res = decode_refine_stream(stream, aux, bbox)
+                    keep_c, lo_d, hi_d = res.keep, res.lo, res.hi
+                else:
+                    lo_d, hi_d = decode_stream_device(stream)
+                    keep_c = np.ones(len(vc), bool)
+                keep_parts.append(keep_c)
+                ix = ragged_ranges(aux.x_start[keep_c], aux.counts[keep_c])
+                iy = ragged_ranges(aux.y_start[keep_c], aux.counts[keep_c])
+                x_parts.append(gather_stream_values(
+                    lo_d, hi_d, ix, width, dtype, keep_on_device=keep_on_device))
+                y_parts.append(gather_stream_values(
+                    lo_d, hi_d, iy, width, dtype, keep_on_device=keep_on_device))
+
+        keep_all = (np.concatenate(keep_parts) if keep_parts
+                    else np.zeros(0, bool))
+        if types_parts:
+            types = np.concatenate(types_parts)
+            type_rep = np.concatenate(type_rep_parts)
+            rep = np.concatenate(rep_parts)
+            defn = np.concatenate(defn_parts)
+            if do_refine:
+                # record-aligned level subset == permute_records on the kept
+                # (sorted) records: canonical levels stay canonical
+                slot_keep = keep_all[np.cumsum(rep == 0) - 1]
+                type_keep = keep_all[np.cumsum(type_rep == 0) - 1]
+                types = types[type_keep]
+                type_rep = type_rep[type_keep]
+                rep = rep[slot_keep]
+                defn = defn[slot_keep]
+            if keep_on_device:
+                x = DeviceCoords.concat(x_parts)
+                y = DeviceCoords.concat(y_parts)
+            else:
+                x = np.concatenate(x_parts)
+                y = np.concatenate(y_parts)
+            geo = GeometryColumns(types, type_rep, rep, defn, x, y)
+        else:
+            geo = None
+        extras = {k: v[:we] for k, v in extra_all.items()}
+        if do_refine and geo is not None:
+            extras = {k: v[keep_all] for k, v in extras.items()}
+        stats.records_returned = geo.n_records if geo is not None else (
+            len(next(iter(extras.values()))) if extras else 0
+        )
+        return geo, extras, stats
+
     def read(self, bbox=None, refine: bool = False) -> tuple[list[Geometry], ReadStats]:
         """Object-API read returning Geometry instances."""
         geo, _, stats = self.read_columnar(bbox=bbox, refine=refine)
         return (assemble(geo) if geo is not None else []), stats
 
 
+def _bbox_keep_mask(x: np.ndarray, y: np.ndarray, counts: np.ndarray,
+                    bbox) -> np.ndarray:
+    """Exact per-record bbox mask over contiguous value slices (the host
+    refinement oracle: NaN-propagating ``minimum.reduceat`` + float
+    compares — any NaN coordinate drops its record)."""
+    counts = np.asarray(counts, np.int64)
+    starts = np.cumsum(counts) - counts
+    keep = np.zeros(len(counts), dtype=bool)
+    nz = counts > 0
+    if nz.any():
+        s = starts[nz]
+        xs = x.astype(np.float64, copy=False)
+        ys = y.astype(np.float64, copy=False)
+        xmin = np.minimum.reduceat(xs, s)
+        xmax = np.maximum.reduceat(xs, s)
+        ymin = np.minimum.reduceat(ys, s)
+        ymax = np.maximum.reduceat(ys, s)
+        qx0, qy0, qx1, qy1 = bbox
+        keep[nz] = (xmin <= qx1) & (xmax >= qx0) & (ymin <= qy1) & (ymax >= qy0)
+    return keep
+
+
 def _records_intersecting(cols: GeometryColumns, bbox) -> np.ndarray:
     """Vectorized exact per-record bbox test (refinement step)."""
     starts = cols.record_value_starts()
     counts = np.diff(np.append(starts, cols.n_values))
-    n_rec = cols.n_records
-    keep = np.zeros(n_rec, dtype=bool)
-    nz = counts > 0
-    if nz.any():
-        s = starts[nz]
-        x = cols.x.astype(np.float64, copy=False)
-        y = cols.y.astype(np.float64, copy=False)
-        xmin = np.minimum.reduceat(x, s)
-        xmax = np.maximum.reduceat(x, s)
-        ymin = np.minimum.reduceat(y, s)
-        ymax = np.maximum.reduceat(y, s)
-        qx0, qy0, qx1, qy1 = bbox
-        keep[nz] = (xmin <= qx1) & (xmax >= qx0) & (ymin <= qy1) & (ymax >= qy0)
-    return np.flatnonzero(keep)
+    return np.flatnonzero(_bbox_keep_mask(cols.x, cols.y, counts, bbox))

@@ -23,7 +23,7 @@ from dataclasses import dataclass
 import msgpack
 import numpy as np
 
-from .columnar import GeometryColumns, from_ragged, shred
+from .columnar import DeviceCoords, GeometryColumns, from_ragged, shred
 from .pages import PageMeta, compress, encode_pages, plan_page_splits
 from .rle import encode_levels, rle_encode
 from .sfc import sort_keys
@@ -66,15 +66,26 @@ def permute_records(cols: GeometryColumns, perm: np.ndarray) -> GeometryColumns:
 
 
 def concat_columns(cols_list: list[GeometryColumns]) -> GeometryColumns:
+    """Concatenate geometry chunks; device-resident coordinate columns
+    (:class:`DeviceCoords`) merge on the accelerator, never the host."""
     if len(cols_list) == 1:
         return cols_list[0]
+
+    def cat_coords(parts):
+        if any(isinstance(p, DeviceCoords) for p in parts):
+            return DeviceCoords.concat([
+                p if isinstance(p, DeviceCoords) else DeviceCoords.from_numpy(p)
+                for p in parts
+            ])
+        return np.concatenate(parts)
+
     return GeometryColumns(
         np.concatenate([c.types for c in cols_list]),
         np.concatenate([c.type_rep for c in cols_list]),
         np.concatenate([c.rep for c in cols_list]),
         np.concatenate([c.defn for c in cols_list]),
-        np.concatenate([c.x for c in cols_list]),
-        np.concatenate([c.y for c in cols_list]),
+        cat_coords([c.x for c in cols_list]),
+        cat_coords([c.y for c in cols_list]),
     )
 
 

@@ -52,17 +52,28 @@ def expand_sources(sources, bbox=None) -> list[str]:
 
 
 class TrajectoryBatcher:
-    """Packs tokenized trajectories into LM batches."""
+    """Packs tokenized trajectories into LM batches.
+
+    ``device="jax"`` serves each shard read through the fused device scan
+    (``read_columnar(device="jax", refine=True, keep_on_device=True)``):
+    decode and bbox refinement run on the accelerator and the batcher
+    receives device-resident :class:`~repro.core.columnar.DeviceCoords` —
+    the only host materialization is the single survivor-coordinate
+    transfer at tokenize time, so pruned records never cross the bus.
+    Batches are bit-identical to the host path.
+    """
 
     def __init__(self, files, tokenizer: GeoTokenizer, *, seq_len: int,
                  global_batch: int, accum: int = 1, bbox=None, seed: int = 0,
-                 loop: bool = True):
+                 loop: bool = True, device: str = "cpu"):
         self.files = expand_sources(files, bbox)
         if not self.files:
             raise ValueError(
                 "TrajectoryBatcher has no input shards/files"
                 + (" (bbox pruned every shard)" if bbox is not None else "")
             )
+        if device not in ("cpu", "jax"):
+            raise ValueError(f"device must be 'cpu' or 'jax', got {device!r}")
         self.tok = tokenizer
         self.seq_len = seq_len
         self.global_batch = global_batch
@@ -70,8 +81,13 @@ class TrajectoryBatcher:
         self.bbox = bbox
         self.rng = np.random.default_rng(seed)
         self.loop = loop
+        self.device = device
 
     def _token_stream(self):
+        device_kw = (
+            {"device": "jax", "keep_on_device": True}
+            if self.device == "jax" else {}
+        )
         while True:
             order = self.rng.permutation(len(self.files))
             for fi in order:
@@ -79,11 +95,15 @@ class TrajectoryBatcher:
                     # project to geometry only: skips decoding (and reading)
                     # every extra column the tokenizer never looks at
                     cols, _, _ = r.read_columnar(
-                        bbox=self.bbox, refine=True, columns=("geometry",)
+                        bbox=self.bbox, refine=True, columns=("geometry",),
+                        **device_kw,
                     )
                     if cols is None or cols.n_records == 0:
                         continue
-                    mat = self.tok.encode_trajectories(cols, self.seq_len)
+                    # the zero-copy handoff boundary: device-resident columns
+                    # materialize survivors exactly once, here
+                    mat = self.tok.encode_trajectories(
+                        cols.coords_to_host(), self.seq_len)
                     for row in self.rng.permutation(len(mat)):
                         yield mat[row]
             if not self.loop:

@@ -7,10 +7,21 @@ The scan pipeline per query:
    worker opens its shard, runs the coalesced-range ``read_columnar`` path
    (per-page pruning + single ``readinto`` per merged run), and decodes.
    With ``max_workers >= 2`` the blocking range reads of shard N+1 overlap
-   the numpy decode of shard N (file I/O releases the GIL).
+   the numpy decode of shard N (file I/O releases the GIL); within a shard,
+   the reader additionally double-buffers row groups.
 3. Results are gathered in submission order — concatenated geometry/extra
    columns are **bit-identical** to a sequential shard-by-shard read,
    regardless of worker completion order.
+
+Device scans: ``device="jax"`` runs each shard's page decode on the
+accelerator; with ``refine=True`` the per-record bbox test is fused into the
+same launch chain (only surviving records transfer), and
+``keep_on_device=True`` merges shard results into device-resident
+:class:`~repro.core.columnar.DeviceCoords` without any host round-trip.
+Worker threads share one process-wide AOT compile cache
+(``repro.kernels.fp_delta.ops``): shard streams are pow2-shape-bucketed and
+tracing is serialized behind a lock, so an N-shard scan traces each shape
+bucket exactly once instead of retracing per worker.
 
 Aggregated :class:`~repro.core.reader.ReadStats` merge every scanned shard's
 account plus the page/byte totals of pruned shards (read side zero), so
@@ -35,22 +46,28 @@ from .manifest import DatasetManifest, shard_path
 class SpatialDatasetScanner:
     """Query interface over a sharded Spatial Parquet dataset."""
 
-    def __init__(self, root, *, max_workers: int = 4, coalesce_max_gap: int = 1 << 16):
+    def __init__(self, root, *, max_workers: int = 4,
+                 coalesce_max_gap: int = 1 << 16, prefetch_row_groups: int = 1):
         self.root = str(root)
         self.manifest = DatasetManifest.load(root)
         self.index = DatasetIndex(self.manifest)
         self.max_workers = max(1, int(max_workers))
         self.coalesce_max_gap = int(coalesce_max_gap)
+        self.prefetch_row_groups = int(prefetch_row_groups)
         self.extra_schema = dict(self.manifest.extra_schema)
         self.n_records = self.manifest.n_records
 
     # ------------------------------------------------------------- internals
-    def _read_shard(self, shard_i: int, bbox, columns, refine, coalesce, device):
+    def _read_shard(self, shard_i: int, bbox, columns, refine, coalesce,
+                    device, keep_on_device):
         path = shard_path(self.root, self.manifest.shards[shard_i])
-        with SpatialParquetReader(path, coalesce_max_gap=self.coalesce_max_gap) as r:
+        with SpatialParquetReader(
+            path, coalesce_max_gap=self.coalesce_max_gap,
+            prefetch_row_groups=self.prefetch_row_groups,
+        ) as r:
             return r.read_columnar(
                 bbox=bbox, columns=columns, refine=refine, coalesce=coalesce,
-                device=device,
+                device=device, keep_on_device=keep_on_device,
             )
 
     # -------------------------------------------------------------- scan API
@@ -62,6 +79,8 @@ class SpatialDatasetScanner:
         parallel: bool = True,
         coalesce: bool = True,
         device: str = "cpu",
+        *,
+        keep_on_device: bool = False,
     ) -> tuple[GeometryColumns | None, dict[str, np.ndarray], ReadStats]:
         """Dataset-wide ``read_columnar``: shard pruning + parallel fan-out.
 
@@ -69,8 +88,12 @@ class SpatialDatasetScanner:
         False`` forces a sequential shard loop (identical results, used by
         the equivalence tests). ``device="jax"`` runs each shard's FP-delta
         page decode on the accelerator (bit-identical results); with
-        ``max_workers >= 2`` the device decode of shard N overlaps the
-        coalesced range reads of shard N+1, exactly like the host decode.
+        ``refine=True`` the bbox refinement is fused into the shard's decode
+        launch so pruned records never reach the host, and with
+        ``max_workers >= 2`` shard N's device work overlaps shard N+1's
+        coalesced range reads, exactly like the host decode.
+        ``keep_on_device=True`` returns device-resident coordinates merged
+        across shards on the accelerator.
         """
         hit = self.index.query(bbox)
         hit_set = set(int(i) for i in hit)
@@ -87,18 +110,20 @@ class SpatialDatasetScanner:
             with ThreadPoolExecutor(max_workers=self.max_workers) as pool:
                 futures = [
                     pool.submit(self._read_shard, int(i), bbox, columns,
-                                refine, coalesce, device)
+                                refine, coalesce, device, keep_on_device)
                     for i in hit
                 ]
                 # gather in submission (manifest) order: deterministic output
                 results = [f.result() for f in futures]
         else:
             results = [
-                self._read_shard(int(i), bbox, columns, refine, coalesce, device)
+                self._read_shard(int(i), bbox, columns, refine, coalesce,
+                                 device, keep_on_device)
                 for i in hit
             ]
 
         geos = [g for g, _, _ in results if g is not None]
+        # concat_columns merges DeviceCoords shards on the accelerator
         geo = concat_columns(geos) if geos else None
         extras: dict[str, np.ndarray] = {}
         if results:
@@ -115,12 +140,16 @@ class SpatialDatasetScanner:
         coalesce: bool = True,
         device: str = "cpu",
         parallel: bool = True,
+        *,
+        keep_on_device: bool = False,
     ):
         """Drop-in for :meth:`SpatialParquetReader.read_columnar` (same
-        positional order; the extra ``parallel`` knob comes last)."""
+        positional order; the extra ``parallel`` knob comes last,
+        ``keep_on_device`` is keyword-only everywhere)."""
         return self.scan(
             bbox=bbox, columns=columns, refine=refine,
             parallel=parallel, coalesce=coalesce, device=device,
+            keep_on_device=keep_on_device,
         )
 
     def read(self, bbox=None, refine: bool = False) -> tuple[list[Geometry], ReadStats]:

@@ -156,18 +156,14 @@ def _stream_decode_kernel(words_ref, off_ref, nbits_ref, anch_ref,
     seen_ref[...] = seen.astype(jnp.int32).reshape(1, *_BLOCK_2D)
 
 
-@functools.partial(jax.jit, static_argnames=("width", "interpret"))
-def decode_stream_blocks(words32, tok_off, nbits, anchor, *,
-                         width: int, interpret: bool = True):
-    """Batched page-stream decode (one launch for many concatenated pages).
+def decode_stream_limbs(words32, tok_off, nbits, anchor, *, interpret: bool = True):
+    """Page-stream decode returning the raw W-bit patterns as uint32 limbs.
 
-    ``words32``: (n_words,) int32 — LE uint32 view of the packed streams,
-    ``n_words % 128 == 0`` with >= 2 trailing spill words. ``tok_off`` /
-    ``nbits`` / ``anchor``: (n_blocks, STREAM_BLOCK) int32; padding tail
-    elements must be anchors so they cannot leak into real segments.
-    Returns the decoded W-bit patterns flattened to (n_blocks*STREAM_BLOCK,):
-    float32 (bitcast on-device) for ``width == 32``, else (lo, hi) int32
-    limbs. Bit-identical to ``ref.decode_stream_ref``.
+    Same contract as :func:`decode_stream_blocks` but without the final
+    bitcast/limb-split: returns ``(lo, hi)`` uint32 arrays flattened to
+    ``(n_blocks*STREAM_BLOCK,)`` (``hi`` is all-zero for 32-bit streams).
+    This is the form the fused decode→refine chain consumes — the order-key
+    transform and segmented bbox reduction run directly on the limbs.
     """
     n_blocks = tok_off.shape[0]
     wr = words32.reshape(-1, 128)
@@ -210,6 +206,24 @@ def decode_stream_blocks(words32, tok_off, nbits, anchor, *,
     shi = hi + chi[:, None] + carry
     flo = jnp.where(seen, lo, slo).reshape(-1)
     fhi = jnp.where(seen, hi, shi).reshape(-1)
+    return flo, fhi
+
+
+@functools.partial(jax.jit, static_argnames=("width", "interpret"))
+def decode_stream_blocks(words32, tok_off, nbits, anchor, *,
+                         width: int, interpret: bool = True):
+    """Batched page-stream decode (one launch for many concatenated pages).
+
+    ``words32``: (n_words,) int32 — LE uint32 view of the packed streams,
+    ``n_words % 128 == 0`` with >= 2 trailing spill words. ``tok_off`` /
+    ``nbits`` / ``anchor``: (n_blocks, STREAM_BLOCK) int32; padding tail
+    elements must be anchors so they cannot leak into real segments.
+    Returns the decoded W-bit patterns flattened to (n_blocks*STREAM_BLOCK,):
+    float32 (bitcast on-device) for ``width == 32``, else (lo, hi) int32
+    limbs. Bit-identical to ``ref.decode_stream_ref``.
+    """
+    flo, fhi = decode_stream_limbs(words32, tok_off, nbits, anchor,
+                                   interpret=interpret)
     if width == 32:
         return jax.lax.bitcast_convert_type(flo.astype(jnp.int32), jnp.float32)
     return flo.astype(jnp.int32), fhi.astype(jnp.int32)

@@ -7,18 +7,30 @@ byte format (used by checkpoint compression, :mod:`repro.train.checkpoint`).
 Also home of the *page-stream* decode entry points (:func:`decode_pages`,
 :func:`build_page_stream`): batched on-device execution of the paper-exact
 FP-delta page format, consumed by ``SpatialParquetReader.read_columnar(
-device="jax")``.
+device="jax")`` — and of the **fused decode→refine** entry point
+(:func:`decode_refine_stream`), which chains the page-stream decode with the
+segmented per-record min/max of :mod:`repro.kernels.minmax` and a bbox
+survivor test in one launch chain, so only surviving records (or just the
+record mask) ever cross back to the host.
+
+Every device callable goes through a process-wide AOT compile cache
+(:func:`_aot`): shapes are pow2-bucketed upstream, and a lock serializes
+tracing so concurrent shard-reader threads (``SpatialDatasetScanner``) trace
+each shape bucket exactly once instead of racing to retrace per shard.
 """
 
 from __future__ import annotations
 
+import functools
 import struct
+import threading
 from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.columnar import DeviceCoords
 from repro.core.fp_delta import HEADER_BITS, FPDeltaPlan, fp_delta_execute
 
 from . import kernel, ref
@@ -29,6 +41,34 @@ _MAGIC = b"FPD2"  # FP-Delta Miniblock v2 (patched)
 
 def _default_interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+# --------------------------------------------------------- AOT compile cache
+# One compiled executable per (callable, shape-bucket, statics) key, shared
+# process-wide. The double-checked lock means N scanner worker threads
+# hitting the same bucket concurrently cost one trace+compile, not N.
+_COMPILE_LOCK = threading.Lock()
+_COMPILED: dict[tuple, object] = {}
+
+
+def _aot(key: tuple, jitted, args: tuple, statics: dict | None = None):
+    """Return the compiled executable for ``jitted`` at ``args``' shapes."""
+    fn = _COMPILED.get(key)
+    if fn is None:
+        with _COMPILE_LOCK:
+            fn = _COMPILED.get(key)
+            if fn is None:
+                shapes = tuple(
+                    jax.ShapeDtypeStruct(np.shape(a), a.dtype) for a in args
+                )
+                fn = jitted.lower(*shapes, **(statics or {})).compile()
+                _COMPILED[key] = fn
+    return fn
+
+
+def compile_cache_stats() -> dict:
+    """Introspection for tests/diagnostics: which buckets have compiled."""
+    return {"count": len(_COMPILED), "keys": sorted(map(repr, _COMPILED))}
 
 
 @dataclass
@@ -273,8 +313,36 @@ def build_page_stream(plans) -> PageStream:
     )
 
 
-_ref_decode_stream = jax.jit(
-    ref.decode_stream_ref, static_argnames=("width",))
+@functools.lru_cache(maxsize=None)
+def _limbs_jit(use_pallas: bool, interpret: bool):
+    """Jitted page-stream decode returning uint32 limb pairs."""
+    if use_pallas:
+        def fn(words32, tok_off, nbits, anchor):
+            return kernel.decode_stream_limbs(
+                words32, tok_off, nbits, anchor, interpret=interpret)
+    else:
+        def fn(words32, tok_off, nbits, anchor):
+            return ref.decode_stream_limbs_ref(words32, tok_off, nbits, anchor)
+    return jax.jit(fn)
+
+
+def _stream_args(stream: PageStream) -> tuple:
+    return (stream.words32, stream.tok_off, stream.nbits, stream.anchor)
+
+
+def decode_stream_device(stream: PageStream, *, use_pallas: bool = True,
+                         interpret: bool | None = None):
+    """Decode a built stream, keeping the result device-resident.
+
+    Returns ``(lo, hi)`` uint32 device arrays of length
+    ``n_blocks * STREAM_BLOCK`` (tail is padding; ``hi`` is zero for 32-bit
+    streams). The bit patterns equal the host decode exactly.
+    """
+    interp = _default_interpret() if interpret is None else interpret
+    args = _stream_args(stream)
+    key = ("limbs", stream.words32.shape[0], stream.tok_off.shape[0],
+           use_pallas, interp)
+    return _aot(key, _limbs_jit(use_pallas, interp), args)(*args)
 
 
 def decode_page_stream(stream: PageStream, *, use_pallas: bool = True,
@@ -286,20 +354,16 @@ def decode_page_stream(stream: PageStream, *, use_pallas: bool = True,
     dtype = np.float32 if stream.width == 32 else np.float64
     if n == 0:
         return np.zeros(0, dtype)
-    args = (jnp.asarray(stream.words32), jnp.asarray(stream.tok_off),
-            jnp.asarray(stream.nbits), jnp.asarray(stream.anchor))
-    if use_pallas:
-        interp = _default_interpret() if interpret is None else interpret
-        out = kernel.decode_stream_blocks(
-            *args, width=stream.width, interpret=interp)
-    else:
-        out = _ref_decode_stream(*args, width=stream.width)
-    if stream.width == 32:
-        return np.asarray(out)[:n]
-    lo, hi = out
-    bits = (np.asarray(hi).view(np.uint32).astype(np.uint64) << np.uint64(32)) | \
-        np.asarray(lo).view(np.uint32).astype(np.uint64)
-    return bits[:n].view(np.float64)
+    lo, hi = decode_stream_device(
+        stream, use_pallas=use_pallas, interpret=interpret)
+    return DeviceCoords(lo[:n], hi[:n] if stream.width == 64 else None,
+                        np.dtype(dtype)).to_numpy()
+
+
+def _plan_bits(p: FPDeltaPlan) -> int:
+    """Packed payload bits a plan occupies in a page stream (spill word
+    excluded — the single source of the launch-cap accounting)."""
+    return (len(p.words) - 1) * 64
 
 
 def decode_pages(plans, *, use_pallas: bool = True,
@@ -325,7 +389,7 @@ def decode_pages(plans, *, use_pallas: bool = True,
     chunk: list[FPDeltaPlan] = []
     bits = 0
     for p in plans:
-        pbits = (len(p.words) - 1) * 64
+        pbits = _plan_bits(p)
         if pbits > _MAX_LAUNCH_BITS:  # one giant page: host-decode it
             flush(chunk)
             chunk, bits = [], 0
@@ -338,6 +402,245 @@ def decode_pages(plans, *, use_pallas: bool = True,
         bits += pbits
     flush(chunk)
     return out
+
+
+def chunk_plan_pairs(plans, pairs):
+    """Group x/y page-pair plans into fused launches under the VMEM cap.
+
+    ``plans[2i]``/``plans[2i+1]`` are the x/y plans of pair ``i``;
+    ``pairs[i] = (rec_lo, rec_hi)`` its record range. Yields ``("dev",
+    plan_list, pair_list, (rec_lo, rec_hi))`` per launch chunk, or
+    ``("host", (plan_x, plan_y), None, (rec_lo, rec_hi))`` for a pair whose
+    packed payload alone exceeds the cap (the caller host-decodes it via
+    ``fp_delta_execute`` — records never straddle pages, so chunk masks
+    concatenate exactly). Lives next to :data:`_MAX_LAUNCH_BITS` so the cap
+    accounting has a single owner (shared with :func:`decode_pages`).
+    """
+    cur_plans: list = []
+    cur_pairs: list = []
+    bits = 0
+    for i, (r0, r1) in enumerate(pairs):
+        px, py = plans[2 * i], plans[2 * i + 1]
+        pbits = _plan_bits(px) + _plan_bits(py)
+        if pbits > _MAX_LAUNCH_BITS:
+            if cur_plans:
+                yield ("dev", cur_plans, cur_pairs,
+                       (cur_pairs[0][0], cur_pairs[-1][1]))
+                cur_plans, cur_pairs, bits = [], [], 0
+            yield ("host", (px, py), None, (r0, r1))
+            continue
+        if cur_plans and bits + pbits > _MAX_LAUNCH_BITS:
+            yield ("dev", cur_plans, cur_pairs,
+                   (cur_pairs[0][0], cur_pairs[-1][1]))
+            cur_plans, cur_pairs, bits = [], [], 0
+        cur_plans += [px, py]
+        cur_pairs.append((r0, r1))
+        bits += pbits
+    if cur_plans:
+        yield ("dev", cur_plans, cur_pairs, (cur_pairs[0][0], cur_pairs[-1][1]))
+
+
+# ------------------------------------------------------ fused decode→refine
+# The device half of ``read_columnar(device="jax", refine=True)``: one jit'd
+# chain runs page-stream decode (Pallas), the order-key transform, the
+# segmented per-record min/max (repro.kernels.minmax), and the bbox survivor
+# test. Decoded coordinates stay device-resident; the host receives the
+# record mask (n_records bools) and then gathers only surviving values with
+# :func:`gather_stream_values`. Pruned records never materialize off-device.
+
+
+@dataclass
+class RefineAux:
+    """Host-built segmentation of a :class:`PageStream` into record slices.
+
+    A record's x values occupy one contiguous slice of the stream and its y
+    values another (pages are record-aligned and interleave x,y per page).
+    ``seg_flag`` marks slice starts (padding tail flagged, mirroring the
+    anchor-padding rule of the decode kernel); ``end_pos[r] = (x_end,
+    y_end)`` is where the inclusive segmented scan holds record ``r``'s
+    reduction. ``x_start``/``y_start``/``counts`` are the slice geometry the
+    host uses to build survivor gather indices.
+    """
+
+    seg_flag: np.ndarray   # (n_blocks, STREAM_BLOCK) int32, 1 at slice starts
+    end_pos: np.ndarray    # (n_rec_pad, 2) int32
+    valid: np.ndarray      # (n_rec_pad,) bool — records with >= 1 value
+    n_records: int
+    x_start: np.ndarray    # (n_records,) int64 stream offset of x slice
+    y_start: np.ndarray    # (n_records,) int64
+    counts: np.ndarray     # (n_records,) int64 values per record (per axis)
+
+
+def build_refine_aux(stream: PageStream, pairs, rec_vcounts) -> RefineAux:
+    """Segment a stream built from interleaved x,y page pairs by record.
+
+    ``pairs[i] = (r0, r1)``: the record range covered by the i-th x/y page
+    pair (``stream.counts[2i]``/``[2i+1]`` are its value counts); records are
+    indexed locally and contiguously across pairs. ``rec_vcounts[r]`` is the
+    per-axis value count of record ``r``.
+    """
+    counts = np.ascontiguousarray(rec_vcounts, dtype=np.int64)
+    n_rec = len(counts)
+    total = stream.n_values
+    n_pad_vals = stream.tok_off.size
+    flag = np.zeros(n_pad_vals, np.int32)
+    flag[total:] = 1  # isolate padding into its own throwaway segments
+    x_start = np.zeros(n_rec, np.int64)
+    y_start = np.zeros(n_rec, np.int64)
+    off = 0
+    for i, (r0, r1) in enumerate(pairs):
+        c = counts[r0:r1]
+        nz = c > 0
+        starts = off + np.cumsum(c) - c
+        x_start[r0:r1] = starts
+        flag[starts[nz]] = 1
+        off += int(stream.counts[2 * i])
+        starts = off + np.cumsum(c) - c
+        y_start[r0:r1] = starts
+        flag[starts[nz]] = 1
+        off += int(stream.counts[2 * i + 1])
+    if off != total:
+        raise ValueError(f"refine aux covers {off} values, stream has {total}")
+    n_rec_pad = _pow2_bucket(max(n_rec, 1), 8)
+    end = np.zeros((n_rec_pad, 2), np.int32)
+    end[:n_rec, 0] = x_start + np.maximum(counts - 1, 0)
+    end[:n_rec, 1] = y_start + np.maximum(counts - 1, 0)
+    valid = np.zeros(n_rec_pad, bool)
+    valid[:n_rec] = counts > 0
+    return RefineAux(flag.reshape(stream.tok_off.shape), end, valid, n_rec,
+                     x_start, y_start, counts)
+
+
+@functools.lru_cache(maxsize=None)
+def _refine_jit(width: int, use_pallas: bool, interpret: bool):
+    """Jitted fused chain: decode limbs → order keys → segmented min/max →
+    bbox survivor mask. Returns (lo, hi, keep)."""
+    from repro.kernels.minmax import (
+        float_order_keys,
+        inf_keys,
+        lex_ge,
+        lex_le,
+        segment_minmax,
+    )
+
+    (neg_lo, neg_hi), (pos_lo, pos_hi) = inf_keys(width)
+
+    def fn(words32, tok_off, nbits, anchor, seg_flag, end_pos, valid, qkeys):
+        if use_pallas:
+            flo, fhi = kernel.decode_stream_limbs(
+                words32, tok_off, nbits, anchor, interpret=interpret)
+        else:
+            flo, fhi = ref.decode_stream_limbs_ref(words32, tok_off, nbits, anchor)
+        klo, khi = float_order_keys(flo, fhi, width)
+        n_blocks = tok_off.shape[0]
+        mnlo, mnhi, mxlo, mxhi = segment_minmax(
+            klo.astype(jnp.int32).reshape(n_blocks, STREAM_BLOCK),
+            khi.astype(jnp.int32).reshape(n_blocks, STREAM_BLOCK),
+            seg_flag, use_pallas=use_pallas, interpret=interpret)
+        ex, ey = end_pos[:, 0], end_pos[:, 1]
+
+        def stat(a, i):
+            return jnp.take(a, i, mode="clip")
+
+        q = qkeys.astype(jnp.uint32)
+        kneg = (jnp.uint32(neg_lo), jnp.uint32(neg_hi))
+        kpos = (jnp.uint32(pos_lo), jnp.uint32(pos_hi))
+        xmn = (stat(mnlo, ex), stat(mnhi, ex))
+        xmx = (stat(mxlo, ex), stat(mxhi, ex))
+        ymn = (stat(mnlo, ey), stat(mnhi, ey))
+        ymx = (stat(mxlo, ey), stat(mxhi, ey))
+        keep = (
+            valid
+            # the bbox intersection test, in key space
+            & lex_le(*xmn, q[1, 0], q[1, 1]) & lex_ge(*xmx, q[0, 0], q[0, 1])
+            & lex_le(*ymn, q[3, 0], q[3, 1]) & lex_ge(*ymx, q[2, 0], q[2, 1])
+            # NaN fence: any NaN keys strictly outside [-inf, +inf], and the
+            # host oracle (NaN-propagating minimum.reduceat) drops the record
+            & lex_le(*xmx, *kpos) & lex_ge(*xmn, *kneg)
+            & lex_le(*ymx, *kpos) & lex_ge(*ymn, *kneg)
+        )
+        return flo, fhi, keep
+
+    return jax.jit(fn)
+
+
+@dataclass
+class RefineResult:
+    """Fused-launch output: device-resident limbs + the host record mask."""
+
+    lo: object            # (n_pad,) uint32 device array (None when skipped)
+    hi: object            # (n_pad,) uint32 device array (None when skipped)
+    keep: np.ndarray      # (n_records,) bool — the only mandatory transfer
+
+
+def decode_refine_stream(stream: PageStream, aux: RefineAux, bbox, *,
+                         use_pallas: bool = True,
+                         interpret: bool | None = None) -> RefineResult:
+    """Fused decode→bbox-refine over one built page stream.
+
+    Decodes the stream on-device, reduces per-record [min,max] of x and y in
+    key space, and tests each record against ``bbox`` — all in one jit'd
+    launch chain. Only the record mask crosses back to the host here; pull
+    surviving coordinates afterwards with :func:`gather_stream_values`.
+    The surviving record set is **bit-identical** to the host refine
+    (NaN-propagating ``minimum.reduceat`` + float compares).
+    """
+    from repro.kernels.minmax import bbox_query_keys
+
+    interp = _default_interpret() if interpret is None else interpret
+    dtype = np.float32 if stream.width == 32 else np.float64
+    qkeys = bbox_query_keys(bbox, dtype)
+    if qkeys is None:  # NaN bound: the host compare keeps nothing
+        return RefineResult(None, None, np.zeros(aux.n_records, bool))
+    args = _stream_args(stream) + (aux.seg_flag, aux.end_pos, aux.valid, qkeys)
+    key = ("refine", stream.words32.shape[0], stream.tok_off.shape[0],
+           aux.end_pos.shape[0], stream.width, use_pallas, interp)
+    lo, hi, keep = _aot(
+        key, _refine_jit(stream.width, use_pallas, interp), args)(*args)
+    return RefineResult(lo, hi, np.asarray(keep)[: aux.n_records])
+
+
+_take_limbs_jit = jax.jit(
+    lambda lo, hi, idx: (jnp.take(lo, idx, mode="clip"),
+                         jnp.take(hi, idx, mode="clip")))
+
+
+def ragged_ranges(starts: np.ndarray, counts: np.ndarray) -> np.ndarray:
+    """Concatenate ``arange(s, s + c)`` for each (start, count) pair."""
+    counts = np.asarray(counts, np.int64)
+    total = int(counts.sum())
+    if total == 0:
+        return np.zeros(0, np.int64)
+    rep_start = np.repeat(np.asarray(starts, np.int64), counts)
+    excl = np.cumsum(counts) - counts
+    return rep_start + (np.arange(total, dtype=np.int64) - np.repeat(excl, counts))
+
+
+def gather_stream_values(lo, hi, idx: np.ndarray, width: int, dtype,
+                         *, keep_on_device: bool = False):
+    """Compact survivor values out of a decoded stream by position.
+
+    ``idx`` (host int array) selects stream positions; the gather runs
+    on-device through a pow2-bucketed compiled take, so the host transfer is
+    bounded by the survivor count (never the full column). Returns a numpy
+    array of ``dtype`` — or a :class:`~repro.core.columnar.DeviceCoords`
+    when ``keep_on_device`` (zero host transfer).
+    """
+    dtype = np.dtype(dtype)
+    n = len(idx)
+    if n == 0:
+        if keep_on_device:
+            return DeviceCoords(jnp.zeros(0, jnp.uint32),
+                                jnp.zeros(0, jnp.uint32) if width == 64 else None,
+                                dtype)
+        return np.zeros(0, dtype)
+    size = _pow2_bucket(n, 8)
+    idx_pad = np.zeros(size, np.int32)
+    idx_pad[:n] = idx
+    key = ("take", int(lo.shape[0]), size)
+    glo, ghi = _aot(key, _take_limbs_jit, (lo, hi, idx_pad))(lo, hi, idx_pad)
+    coords = DeviceCoords(glo[:n], ghi[:n] if width == 64 else None, dtype)
+    return coords if keep_on_device else coords.to_numpy()
 
 
 def compress_array(x: np.ndarray, **kw) -> bytes:

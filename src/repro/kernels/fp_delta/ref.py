@@ -306,6 +306,18 @@ def segmented_scan(vlo, vhi, flag):
     return vlo, vhi, f
 
 
+def decode_stream_limbs_ref(words_u32, tok_off, nbits, anchor):
+    """Flat-scan oracle returning the decoded patterns as uint32 limb pairs
+    (the fused refine chain's input form; ``hi`` is zero for 32-bit)."""
+    offs = tok_off.reshape(-1)
+    nb = nbits.reshape(-1)
+    anc = anchor.reshape(-1) != 0
+    lo, hi = gather_tokens(words_u32, offs, nb)
+    vlo, vhi = stream_values(lo, hi, anc)
+    flo, fhi, _ = segmented_scan(vlo, vhi, anc)
+    return flo, fhi
+
+
 def decode_stream_ref(words_u32, tok_off, nbits, anchor, *, width: int):
     """Pure-jnp oracle for the page-stream decode: one flat global segmented
     scan (structurally unlike the kernel's block-local scans + carry stitch,
@@ -314,12 +326,7 @@ def decode_stream_ref(words_u32, tok_off, nbits, anchor, *, width: int):
     Returns float32 values for ``width == 32``, or ``(lo, hi)`` int32 limb
     arrays for ``width == 64`` (the float64 bitcast is a host-side view).
     """
-    offs = tok_off.reshape(-1)
-    nb = nbits.reshape(-1)
-    anc = anchor.reshape(-1) != 0
-    lo, hi = gather_tokens(words_u32, offs, nb)
-    vlo, vhi = stream_values(lo, hi, anc)
-    flo, fhi, _ = segmented_scan(vlo, vhi, anc)
+    flo, fhi = decode_stream_limbs_ref(words_u32, tok_off, nbits, anchor)
     if width == 32:
         return jax.lax.bitcast_convert_type(flo.astype(jnp.int32), jnp.float32)
     return flo.astype(jnp.int32), fhi.astype(jnp.int32)

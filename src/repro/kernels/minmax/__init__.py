@@ -1,4 +1,29 @@
-from .ops import column_page_stats, page_minmax
-from .ref import minmax_ref
+from .kernel import SEG_BLOCK
+from .ops import column_page_stats, page_minmax, segment_minmax
+from .ref import (
+    bbox_query_keys,
+    float_order_key_np,
+    float_order_keys,
+    inf_keys,
+    lex_ge,
+    lex_gt,
+    lex_le,
+    minmax_ref,
+    segment_minmax_ref,
+)
 
-__all__ = ["page_minmax", "column_page_stats", "minmax_ref"]
+__all__ = [
+    "page_minmax",
+    "column_page_stats",
+    "segment_minmax",
+    "segment_minmax_ref",
+    "minmax_ref",
+    "float_order_keys",
+    "float_order_key_np",
+    "bbox_query_keys",
+    "inf_keys",
+    "lex_gt",
+    "lex_le",
+    "lex_ge",
+    "SEG_BLOCK",
+]

@@ -1,9 +1,19 @@
-"""Pallas TPU kernel: per-page [min,max] statistics (paper §4 index build).
+"""Pallas TPU kernels: per-page [min,max] statistics (paper §4 index build)
+and the segmented per-record min/max scan of the fused decode→refine path.
 
-Grid is (n_pages, page_tiles): the page dimension is parallel, the tile
-dimension is sequential with VMEM scratch accumulation — pages of any size
-stream through a fixed (8, 128)-aligned VMEM tile, so the working set is
-constant regardless of page size.
+``minmax``: grid is (n_pages, page_tiles): the page dimension is parallel,
+the tile dimension is sequential with VMEM scratch accumulation — pages of
+any size stream through a fixed (8, 128)-aligned VMEM tile, so the working
+set is constant regardless of page size.
+
+``segminmax_blocks``: the record-granular sibling, structured exactly like
+the page-stream decode kernel in ``repro.kernels.fp_delta``: each grid step
+runs a block-local segmented min/max scan (log-step shifted combines on the
+VPU) over one block of 1024 order-key limb pairs; cross-block carries are
+stitched afterwards with one tiny associative scan over per-block summaries,
+keeping the grid embarrassingly parallel. The scan state per element is
+``(min_lo, min_hi, max_lo, max_hi, seen_flag)`` with lexicographic uint32
+limb compares — see ref.py for the order-key math and the flat oracle.
 """
 
 from __future__ import annotations
@@ -14,7 +24,12 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .ref import _MAX_IDENT, _MIN_IDENT, minmax_seg_combine, segmented_minmax_scan
+
 _TILE = 2048  # values per grid step; multiple of (8, 128)
+
+SEG_BLOCK = 1024  # values per grid step of the segmented scan, one VPU tile
+_BLOCK_2D = (8, 128)
 
 
 def _minmax_kernel(x_ref, min_ref, max_ref):
@@ -58,3 +73,65 @@ def minmax(x: jnp.ndarray, *, interpret: bool = True):
         interpret=interpret,
     )(x)
     return mins[:, 0], maxs[:, 0]
+
+
+# ---------------------------------------------------------- segmented minmax
+def _segminmax_kernel(klo_ref, khi_ref, flag_ref,
+                      mnlo_ref, mnhi_ref, mxlo_ref, mxhi_ref, seen_ref):
+    klo = klo_ref[...].reshape(SEG_BLOCK).astype(jnp.uint32)
+    khi = khi_ref[...].reshape(SEG_BLOCK).astype(jnp.uint32)
+    flag = flag_ref[...].reshape(SEG_BLOCK) != 0
+    mnlo, mnhi, mxlo, mxhi, seen = segmented_minmax_scan(klo, khi, flag)
+    mnlo_ref[...] = mnlo.astype(jnp.int32).reshape(1, *_BLOCK_2D)
+    mnhi_ref[...] = mnhi.astype(jnp.int32).reshape(1, *_BLOCK_2D)
+    mxlo_ref[...] = mxlo.astype(jnp.int32).reshape(1, *_BLOCK_2D)
+    mxhi_ref[...] = mxhi.astype(jnp.int32).reshape(1, *_BLOCK_2D)
+    seen_ref[...] = seen.astype(jnp.int32).reshape(1, *_BLOCK_2D)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def segminmax_blocks(key_lo, key_hi, flag, *, interpret: bool = True):
+    """Batched segmented min/max over order keys (one launch per stream).
+
+    ``key_lo``/``key_hi``: (n_blocks, SEG_BLOCK) int32 order-key limbs;
+    ``flag``: (n_blocks, SEG_BLOCK) int32, 1 at segment starts (padding tail
+    elements must be flagged so they cannot leak into real segments).
+    Returns ``(min_lo, min_hi, max_lo, max_hi)`` uint32 arrays flattened to
+    (n_blocks*SEG_BLOCK,): the inclusive segmented scan, so the value at a
+    segment's last position is that segment's reduction. Bit-identical to
+    ``ref.segment_minmax_ref``.
+    """
+    n_blocks = key_lo.shape[0]
+    kl = key_lo.reshape(n_blocks, *_BLOCK_2D)
+    kh = key_hi.reshape(n_blocks, *_BLOCK_2D)
+    fl = flag.reshape(n_blocks, *_BLOCK_2D)
+    spec = pl.BlockSpec((1, *_BLOCK_2D), lambda b: (b, 0, 0))
+    shape = jax.ShapeDtypeStruct((n_blocks, *_BLOCK_2D), jnp.int32)
+    outs = pl.pallas_call(
+        _segminmax_kernel,
+        grid=(n_blocks,),
+        in_specs=[spec, spec, spec],
+        out_specs=[spec] * 5,
+        out_shape=[shape] * 5,
+        interpret=interpret,
+    )(kl, kh, fl)
+    mnlo, mnhi, mxlo, mxhi = (
+        o.reshape(n_blocks, SEG_BLOCK).astype(jnp.uint32) for o in outs[:4]
+    )
+    seen = outs[4].reshape(n_blocks, SEG_BLOCK) != 0
+    # Carry stitch: block b inherits the running min/max of the last open
+    # segment before it — an exclusive segmented combine of the per-block
+    # summaries (each block's last scanned element + "block saw a flag").
+    summ = (mnlo[:, -1], mnhi[:, -1], mxlo[:, -1], mxhi[:, -1], seen[:, -1])
+    inc = jax.lax.associative_scan(minmax_seg_combine, summ)
+    ident = (
+        jnp.full(1, _MIN_IDENT, jnp.uint32), jnp.full(1, _MIN_IDENT, jnp.uint32),
+        jnp.full(1, _MAX_IDENT, jnp.uint32), jnp.full(1, _MAX_IDENT, jnp.uint32),
+        jnp.zeros(1, jnp.bool_),
+    )
+    carry = tuple(
+        jnp.concatenate([i, s[:-1]])[:, None] for i, s in zip(ident, inc)
+    )
+    local = (mnlo, mnhi, mxlo, mxhi, seen)
+    fin = minmax_seg_combine(carry, local)
+    return tuple(f.reshape(-1) for f in fin[:4])

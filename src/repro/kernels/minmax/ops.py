@@ -1,4 +1,16 @@
-"""Wrapper for the page-statistics kernel: ragged pages, padding, dispatch."""
+"""Wrappers for the page-statistics kernels: ragged pages, padding, dispatch.
+
+``column_page_stats`` is fully batched: ragged record-aligned pages are
+padded edge-value style into one ``(n_pages, max_len)`` matrix and reduced in
+a **single** ``page_minmax`` launch (the per-page Python loop of earlier
+revisions launched the kernel once per page). Edge padding keeps per-page
+results identical to the loop; empty pages are patched to ``(+inf, -inf)``
+on the host afterwards.
+
+``segment_minmax`` dispatches the segmented per-record min/max scan (order
+keys, see ref.py) between the Pallas block kernel and the flat jnp oracle —
+the reduction stage of ``repro.kernels.fp_delta.decode_refine_stream``.
+"""
 
 from __future__ import annotations
 
@@ -7,7 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import kernel, ref
-from .kernel import _TILE
+from .kernel import _TILE, SEG_BLOCK
 
 
 def _default_interpret() -> bool:
@@ -29,23 +41,78 @@ def page_minmax(
     return kernel.minmax(x, interpret=interp)
 
 
+# dense-batch element budget of column_page_stats (float32 elements, 64 MiB):
+# bounds the padded (rows, max_len) matrix so one outlier-long page cannot
+# inflate the whole batch to n_pages * max_len
+_BATCH_BUDGET = 1 << 24
+
+
+def _batch_spans(counts: np.ndarray):
+    """Split pages into contiguous row spans with rows * running_max under
+    the budget (a skewed giant page lands in its own span)."""
+    spans = []
+    start, mx = 0, 1
+    for i, c in enumerate(counts):
+        mx_new = max(mx, int(c), 1)
+        if i > start and (i + 1 - start) * mx_new > _BATCH_BUDGET:
+            spans.append((start, i))
+            start, mx = i, max(int(c), 1)
+        else:
+            mx = mx_new
+    spans.append((start, len(counts)))
+    return spans
+
+
 def column_page_stats(values: np.ndarray, page_bounds: np.ndarray, **kw):
     """Ragged host entry: per-page stats for record-aligned page bounds.
 
     Used as the accelerated index-build path; equals what the writer computes
-    per page on the host.
+    per page on the host. One batched launch for the whole column (typical
+    layouts): pages are edge-padded to the longest page — padding with a
+    page's own last value changes neither its min nor its max — and empty
+    pages patched to ``(+inf, -inf)`` afterwards. Heavily skewed page sizes
+    split into a few budget-bounded launches instead of one dense matrix.
     """
     values = np.asarray(values, dtype=np.float32)
-    out_min, out_max = [], []
-    for i in range(len(page_bounds) - 1):
-        chunk = values[page_bounds[i] : page_bounds[i + 1]]
-        if not len(chunk):
-            out_min.append(np.inf)
-            out_max.append(-np.inf)
-            continue
-        pad = (-len(chunk)) % _TILE
-        padded = np.concatenate([chunk, np.repeat(chunk[-1:], pad)]) if pad else chunk
-        mn, mx = page_minmax(padded.reshape(1, -1), **kw)
-        out_min.append(float(mn[0]))
-        out_max.append(float(mx[0]))
-    return np.array(out_min), np.array(out_max)
+    bounds = np.asarray(page_bounds, dtype=np.int64)
+    counts = np.diff(bounds)
+    n_pages = len(counts)
+    if n_pages == 0:
+        return np.zeros(0), np.zeros(0)
+    empty = counts == 0
+    out_min = np.full(n_pages, np.inf)
+    out_max = np.full(n_pages, -np.inf)
+    if len(values) == 0 or empty.all():
+        return out_min, out_max
+    for lo, hi in _batch_spans(counts):
+        c = counts[lo:hi]
+        max_len = max(int(c.max()), 1)
+        # int32 positions + in-place clip keep the gather-index temporaries
+        # within a small constant factor of the float32 batch itself
+        pos = np.minimum(np.arange(max_len, dtype=np.int32)[None, :],
+                         np.maximum(c - 1, 0).astype(np.int32)[:, None])
+        idx = bounds[lo:hi, None] + pos
+        np.minimum(idx, len(values) - 1, out=idx)
+        batch = values[idx]
+        mn, mx = page_minmax(jnp.asarray(batch), **kw)
+        out_min[lo:hi] = np.asarray(mn)
+        out_max[lo:hi] = np.asarray(mx)
+    out_min[empty] = np.inf
+    out_max[empty] = -np.inf
+    return out_min, out_max
+
+
+def segment_minmax(key_lo, key_hi, flag, *, use_pallas: bool = True,
+                   interpret: bool | None = None):
+    """Segmented running min/max over order-key limbs.
+
+    Inputs shaped ``(n_blocks, SEG_BLOCK)`` int32 (flags: 1 at segment
+    starts; padding tail must be flagged). Returns four flattened uint32
+    arrays ``(min_lo, min_hi, max_lo, max_hi)``; the value at a segment's
+    last position is the segment's reduction. jit-safe (used inside the
+    fused decode→refine launch chain).
+    """
+    if not use_pallas:
+        return ref.segment_minmax_ref(key_lo, key_hi, flag)
+    interp = _default_interpret() if interpret is None else interpret
+    return kernel.segminmax_blocks(key_lo, key_hi, flag, interpret=interp)

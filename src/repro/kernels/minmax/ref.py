@@ -1,14 +1,216 @@
-"""Oracle for the page min/max statistics kernel (paper §4 index build).
+"""Oracles for the min/max statistics kernels (paper §4 index build + the
+device-side bbox refinement of the fused scan).
 
-Input: (n_pages, page_size) float32 column values.
-Output: (n_pages,) mins and (n_pages,) maxes — the per-page [min, max]
-statistics that *are* the light-weight spatial index.
+Two reductions live here:
+
+* :func:`minmax_ref` — dense per-page ``[min, max]`` over a
+  ``(n_pages, page_size)`` float32 matrix: the light-weight spatial index.
+* :func:`segment_minmax_ref` — *segmented* running min/max over a flat value
+  stream whose elements are IEEE-754 bit patterns mapped to **order keys**
+  (uint32 limb pairs, see :func:`float_order_keys`). Segments are delimited
+  by start flags; the inclusive scan result at a segment's last element is
+  that segment's reduction. This is the per-record bbox statistic of the
+  fused decode→refine read path (`repro.kernels.fp_delta.decode_refine_stream`):
+  all comparisons run on uint32 limbs, so float64 coordinates refine on-device
+  without 64-bit lanes (no ``jax_enable_x64``).
+
+Order keys
+----------
+
+``key(v)`` is the classic total-order transform of an IEEE float's bit
+pattern: flip all bits when the sign bit is set, else set the sign bit.
+``key`` is strictly monotonic in the float total order, so
+``float_cmp(a, b) == uint_cmp(key(a), key(b))`` for all non-NaN values, with
+``-0.0 < +0.0`` (callers canonicalize zero-valued query bounds so the bbox
+test is unaffected) and every NaN mapping strictly above ``key(+inf)``
+(positive NaNs) or strictly below ``key(-inf)`` (negative NaNs) — which is
+exactly how the refine step detects NaN-poisoned records and drops them,
+matching numpy's NaN-propagating ``minimum.reduceat`` on the host.
+
+64-bit patterns are handled as ``(lo, hi)`` uint32 limb pairs compared
+lexicographically (``hi`` first); 32-bit patterns use ``lo = 0``.
 """
 
 from __future__ import annotations
 
+import math
+
 import jax.numpy as jnp
+import numpy as np
+
+# per-lane scan identities: min lanes start at the largest key, max at the
+# smallest, so combine(identity, b) == b
+_MIN_IDENT = 0xFFFFFFFF
+_MAX_IDENT = 0
 
 
 def minmax_ref(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
     return jnp.min(x, axis=1), jnp.max(x, axis=1)
+
+
+# ------------------------------------------------------------ order-key math
+def float_order_keys(lo: jnp.ndarray, hi: jnp.ndarray, width: int):
+    """Map decoded W-bit patterns (uint32 limbs) to total-order keys.
+
+    ``width == 32`` ignores ``hi`` (the pattern is ``lo``) and returns
+    ``(key, 0)`` so the lexicographic compare degenerates to one limb.
+    """
+    if width == 32:
+        u = lo.astype(jnp.uint32)
+        sign = (u >> jnp.uint32(31)) != 0
+        khi = u ^ jnp.where(sign, jnp.uint32(0xFFFFFFFF), jnp.uint32(0x80000000))
+        return jnp.zeros_like(khi), khi
+    l = lo.astype(jnp.uint32)
+    h = hi.astype(jnp.uint32)
+    sign = (h >> jnp.uint32(31)) != 0
+    khi = h ^ jnp.where(sign, jnp.uint32(0xFFFFFFFF), jnp.uint32(0x80000000))
+    klo = l ^ jnp.where(sign, jnp.uint32(0xFFFFFFFF), jnp.uint32(0))
+    return klo, khi
+
+
+def lex_gt(alo, ahi, blo, bhi):
+    """Lexicographic ``(ahi, alo) > (bhi, blo)`` on uint32 limbs."""
+    return (ahi > bhi) | ((ahi == bhi) & (alo > blo))
+
+
+def lex_le(alo, ahi, blo, bhi):
+    return ~lex_gt(alo, ahi, blo, bhi)
+
+
+def lex_ge(alo, ahi, blo, bhi):
+    return ~lex_gt(blo, bhi, alo, ahi)
+
+
+def minmax_seg_combine(a, b):
+    """Associative combine of the segmented min/max scan; ``b`` is the
+    *later* operand. State: ``(min_lo, min_hi, max_lo, max_hi, flag)`` —
+    a segment-start flag in ``b`` blocks ``a``'s contribution entirely."""
+    amnlo, amnhi, amxlo, amxhi, af = a
+    bmnlo, bmnhi, bmxlo, bmxhi, bf = b
+    a_min_gt = lex_gt(amnlo, amnhi, bmnlo, bmnhi)
+    mnlo = jnp.where(a_min_gt, bmnlo, amnlo)
+    mnhi = jnp.where(a_min_gt, bmnhi, amnhi)
+    a_max_gt = lex_gt(amxlo, amxhi, bmxlo, bmxhi)
+    mxlo = jnp.where(a_max_gt, amxlo, bmxlo)
+    mxhi = jnp.where(a_max_gt, amxhi, bmxhi)
+    return (
+        jnp.where(bf, bmnlo, mnlo),
+        jnp.where(bf, bmnhi, mnhi),
+        jnp.where(bf, bmxlo, mxlo),
+        jnp.where(bf, bmxhi, mxhi),
+        af | bf,
+    )
+
+
+def segmented_minmax_scan(klo, khi, flag):
+    """Inclusive Hillis–Steele segmented min/max scan over the last axis.
+
+    ``klo``/``khi``: uint32 order-key limbs; ``flag``: bool segment starts.
+    Returns the five scanned state arrays (min/max limbs + seen flag).
+    """
+    state = (klo, khi, klo, khi, flag)
+    n = klo.shape[-1]
+    shift = 1
+    while shift < n:
+        head = state[0].shape[:-1] + (shift,)
+        prev = (
+            jnp.concatenate(
+                [jnp.full(head, _MIN_IDENT, jnp.uint32), state[0][..., :-shift]], -1),
+            jnp.concatenate(
+                [jnp.full(head, _MIN_IDENT, jnp.uint32), state[1][..., :-shift]], -1),
+            jnp.concatenate(
+                [jnp.full(head, _MAX_IDENT, jnp.uint32), state[2][..., :-shift]], -1),
+            jnp.concatenate(
+                [jnp.full(head, _MAX_IDENT, jnp.uint32), state[3][..., :-shift]], -1),
+            jnp.concatenate(
+                [jnp.zeros(head, jnp.bool_), state[4][..., :-shift]], -1),
+        )
+        state = minmax_seg_combine(prev, state)
+        shift *= 2
+    return state
+
+
+def segment_minmax_ref(klo, khi, flag):
+    """Flat-scan oracle: one global segmented scan over the whole stream
+    (structurally unlike the kernel's block-local scans + carry stitch).
+
+    Returns ``(min_lo, min_hi, max_lo, max_hi)`` flattened; the value at a
+    segment's last position is the segment's reduction.
+    """
+    out = segmented_minmax_scan(
+        klo.reshape(-1).astype(jnp.uint32),
+        khi.reshape(-1).astype(jnp.uint32),
+        flag.reshape(-1) != 0,
+    )
+    return out[0], out[1], out[2], out[3]
+
+
+# -------------------------------------------------- host-side query-key math
+def float_order_key_np(v, dtype: np.dtype) -> tuple[int, int]:
+    """Host mirror of :func:`float_order_keys` for one scalar: (lo, hi)."""
+    dtype = np.dtype(dtype)
+    if dtype.itemsize == 4:
+        u = int(np.array(v, dtype).view(np.uint32))
+        k = u ^ (0xFFFFFFFF if u >> 31 else 0x80000000)
+        return 0, k
+    u = int(np.array(v, dtype).view(np.uint64))
+    lo, hi = u & 0xFFFFFFFF, u >> 32
+    if hi >> 31:
+        return lo ^ 0xFFFFFFFF, hi ^ 0xFFFFFFFF
+    return lo, hi ^ 0x80000000
+
+
+def _canonical_bound(q: float, dtype: np.dtype, side: str):
+    """Tightest ``dtype`` value usable for an exact float64-query compare.
+
+    ``side == "hi"`` (tests ``v <= q``): the largest dtype value ``<= q``;
+    ``side == "lo"`` (tests ``v >= q``): the smallest dtype value ``>= q``.
+    Zeros canonicalize to the extreme key of the {-0.0, +0.0} equivalence
+    class so key-space compares match float compares. Returns None for NaN.
+    """
+    q = float(q)
+    if math.isnan(q):
+        return None
+    if np.dtype(dtype).itemsize == 4:
+        with np.errstate(over="ignore"):  # out-of-range bounds round to ±inf
+            qf = np.float32(q)
+        # compare in float64 explicitly: NEP 50 would weakly demote the
+        # Python float to float32 and the tightening would never fire
+        if side == "hi" and float(qf) > q:
+            qf = np.nextafter(qf, np.float32(-np.inf))
+        elif side == "lo" and float(qf) < q:
+            qf = np.nextafter(qf, np.float32(np.inf))
+        q = float(qf)
+        one = np.float32
+    else:
+        one = np.float64
+    if q == 0.0:
+        q = 0.0 if side == "hi" else -0.0
+    return one(q)
+
+
+def bbox_query_keys(bbox, dtype: np.dtype) -> np.ndarray | None:
+    """Query bbox -> (4, 2) uint32 key limbs ``[(lo, hi) for x0, x1, y0, y1]``.
+
+    Bounds are canonicalized per coordinate dtype (float32 bounds round to
+    the tightest representable value, zeros pick the matching signed zero)
+    so the device key compare is *exactly* the host float compare. Returns
+    None when any bound is NaN — the host test then keeps no record.
+    """
+    qx0, qy0, qx1, qy1 = bbox
+    vals = (
+        _canonical_bound(qx0, dtype, "lo"),
+        _canonical_bound(qx1, dtype, "hi"),
+        _canonical_bound(qy0, dtype, "lo"),
+        _canonical_bound(qy1, dtype, "hi"),
+    )
+    if any(v is None for v in vals):
+        return None
+    keys = [float_order_key_np(v, dtype) for v in (vals[0], vals[1], vals[2], vals[3])]
+    return np.array(keys, dtype=np.uint32)
+
+
+def inf_keys(width: int) -> tuple[tuple[int, int], tuple[int, int]]:
+    """Order keys of (-inf, +inf) as ((lo, hi), (lo, hi)) for NaN fencing."""
+    dtype = np.float32 if width == 32 else np.float64
+    return (float_order_key_np(-np.inf, dtype), float_order_key_np(np.inf, dtype))

@@ -1,0 +1,555 @@
+"""Differential suite for the fused on-device decode→bbox-refine scan.
+
+The contract under test: ``read_columnar(device="jax", refine=True)`` (and
+the dataset scanner's equivalent) must select a record set **bit-identical**
+to the host refine path — NaN-propagating ``minimum.reduceat`` + float
+compares — across selectivities, degenerate bboxes (empty, point, full
+extent), encodings (fp_delta / raw), codecs, coordinate widths, and page /
+row-group layouts, while executing the refinement on-device (order-key limb
+math, no ``jax_enable_x64``) and transferring only surviving records.
+
+Everything runs in Pallas interpret mode, so CPU CI exercises the full
+chain. Property tests follow the PR 1 optional-deps convention: with
+``hypothesis`` installed they generate adversarial floats; without it they
+run fixed seeded samples instead of being skipped.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+
+from repro.core.columnar import DeviceCoords, from_ragged
+from repro.core.fp_delta import fp_delta_encode, fp_delta_plan
+from repro.core.reader import SpatialParquetReader, _bbox_keep_mask
+from repro.core.writer import write_file
+from repro.data.synthetic import DATASETS
+from repro.kernels.fp_delta import (
+    build_page_stream,
+    build_refine_aux,
+    compile_cache_stats,
+    decode_refine_stream,
+    gather_stream_values,
+    ragged_ranges,
+)
+
+try:
+    from hypothesis import given, settings, strategies as hyp_st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - optional wheel
+    HAVE_HYPOTHESIS = False
+
+_SEEDS = [0, 1, 7, 42, 1234]
+
+
+def _ib(a):
+    return a.view(np.int64 if a.dtype.itemsize == 8 else np.int32)
+
+
+def assert_same_result(res_host, res_dev, ctx=""):
+    """Full three-tuple equality: every level/coord/extra array bit-for-bit
+    plus the stats account."""
+    gh, eh, sh = res_host
+    gd, ed, sd = res_dev
+    assert (gh is None) == (gd is None), ctx
+    if gh is not None:
+        gd = gd.coords_to_host()
+        for f in ("types", "type_rep", "rep", "defn"):
+            assert np.array_equal(getattr(gh, f), getattr(gd, f)), (ctx, f)
+        assert np.array_equal(_ib(gh.x), _ib(gd.x)), ctx
+        assert np.array_equal(_ib(gh.y), _ib(gd.y)), ctx
+    assert set(eh) == set(ed), ctx
+    for k in eh:
+        assert np.array_equal(eh[k], ed[k]), (ctx, k)
+    assert sh == sd, ctx
+
+
+# --------------------------------------------------------------- op-level
+def _refine_direct(pages_x, pages_y, counts_per_rec, pairs, bbox, dtype,
+                   use_pallas):
+    """Drive decode_refine_stream directly from raw per-page value arrays."""
+    plans = []
+    for px, py in zip(pages_x, pages_y):
+        for v in (px, py):
+            payload, _ = fp_delta_encode(v.astype(dtype, copy=False))
+            plans.append(fp_delta_plan(payload, len(v), dtype))
+    stream = build_page_stream(plans)
+    aux = build_refine_aux(stream, pairs, counts_per_rec)
+    return stream, aux, decode_refine_stream(
+        stream, aux, bbox, use_pallas=use_pallas, interpret=True)
+
+
+@pytest.mark.parametrize("dtype", [np.float64, np.float32])
+@pytest.mark.parametrize("use_pallas", [True, False])
+def test_op_mask_matches_host_oracle(rng, dtype, use_pallas):
+    """Adversarial values (NaN, ±inf, ±0, denormals) straddling a kernel
+    block boundary: the device mask equals the reduceat oracle."""
+    n_rec = 64
+    counts = rng.integers(0, 40, n_rec)
+    counts[5] = 0
+    vals = []
+    for c in counts:
+        v = rng.normal(0, 5, c)
+        for special in (np.nan, np.inf, -np.inf, -0.0, 5e-324):
+            if c and rng.random() < 0.3:
+                v[rng.integers(0, c)] = special
+        vals.append(v.astype(dtype))
+    yvals = [rng.normal(0, 5, c).astype(dtype) for c in counts]
+    split = 33
+    pages_x = [np.concatenate(vals[:split]) if split else np.zeros(0, dtype),
+               np.concatenate(vals[split:])]
+    pages_y = [np.concatenate(yvals[:split]), np.concatenate(yvals[split:])]
+    pairs = [(0, split), (split, n_rec)]
+    bbox = (-2.0, -3.0, 4.0, 3.0)
+    stream, aux, res = _refine_direct(
+        pages_x, pages_y, counts, pairs, bbox, np.dtype(dtype), use_pallas)
+    x_all = np.concatenate(pages_x)
+    y_all = np.concatenate(pages_y)
+    oracle = _bbox_keep_mask(x_all, y_all, counts, bbox)
+    assert np.array_equal(res.keep, oracle)
+    # survivor gather is bit-exact and only transfers survivors
+    sel = res.keep
+    ix = ragged_ranges(aux.x_start[sel], aux.counts[sel])
+    got = gather_stream_values(res.lo, res.hi, ix, np.dtype(dtype).itemsize * 8,
+                               dtype)
+    starts = np.cumsum(counts) - counts
+    want = np.concatenate(
+        [x_all[s : s + c] for s, c in zip(starts[sel], counts[sel])]
+        or [np.zeros(0, dtype)])
+    assert np.array_equal(_ib(got), _ib(want.astype(dtype)))
+
+
+def test_op_nan_bbox_keeps_nothing(rng):
+    counts = np.array([3, 4])
+    xs = [np.arange(7, dtype=np.float64)]
+    ys = [np.arange(7, dtype=np.float64)]
+    _, _, res = _refine_direct(xs, ys, counts, [(0, 2)],
+                               (np.nan, 0.0, 1.0, 1.0), np.dtype(np.float64),
+                               True)
+    assert not res.keep.any()
+    assert res.lo is None  # the launch is skipped entirely
+
+
+# ------------------------------------------------------------ reader-level
+def _pt_file(tmp_path, name="pt.spqf", **kw):
+    cols = DATASETS["PT"](n_traj=300)
+    path = tmp_path / name
+    kw.setdefault("codec", "none")
+    kw.setdefault("sort", "hilbert")
+    kw.setdefault("page_values", 2048)
+    write_file(path, columns=cols, **kw)
+    return path
+
+
+def _quantile_bbox(geo, frac):
+    x = np.asarray(geo.x, np.float64)
+    y = np.asarray(geo.y, np.float64)
+    return (float(x.min()), float(y.min()),
+            float(np.quantile(x, frac)), float(np.quantile(y, frac)))
+
+
+def test_reader_selectivity_sweep(tmp_path):
+    """Empty, ~1%, ~10%, ~50%, full-extent and point-degenerate queries:
+    full-result equality incl. stats."""
+    path = _pt_file(tmp_path)
+    with SpatialParquetReader(path) as r:
+        g0, _, _ = r.read_columnar()
+        boxes = {
+            "p01": _quantile_bbox(g0, 0.01),
+            "p10": _quantile_bbox(g0, 0.10),
+            "p50": _quantile_bbox(g0, 0.50),
+            "full": _quantile_bbox(g0, 1.0),
+            "point": (float(g0.x[7]), float(g0.y[7]),
+                      float(g0.x[7]), float(g0.y[7])),
+            "miss": (float(g0.x.min()) - 3.0, float(g0.y.min()) - 3.0,
+                     float(g0.x.min()) - 2.0, float(g0.y.min()) - 2.0),
+        }
+        for name, bbox in boxes.items():
+            host = r.read_columnar(bbox=bbox, refine=True)
+            dev = r.read_columnar(bbox=bbox, refine=True, device="jax")
+            assert_same_result(host, dev, name)
+        # full-extent refine keeps everything; miss keeps nothing
+        assert r.read_columnar(bbox=boxes["full"], refine=True,
+                               device="jax")[2].records_returned == g0.n_records
+
+
+def test_reader_refines_to_zero_after_page_hits(tmp_path):
+    """A bbox that hits pages but no exact record: both paths agree on the
+    empty-but-not-None result."""
+    path = _pt_file(tmp_path, page_values=512)
+    with SpatialParquetReader(path) as r:
+        g0, _, _ = r.read_columnar()
+        # slot a sliver between two consecutive distinct x values
+        xs = np.unique(np.asarray(g0.x, np.float64))
+        mid = len(xs) // 2
+        lohi = (np.nextafter(xs[mid], xs[mid + 1]),
+                np.nextafter(xs[mid + 1], xs[mid]))
+        bbox = (lohi[0], float(g0.y.min()), lohi[1], float(g0.y.max()))
+        host = r.read_columnar(bbox=bbox, refine=True)
+        dev = r.read_columnar(bbox=bbox, refine=True, device="jax")
+        assert host[2].pages_read > 0
+        assert_same_result(host, dev, "sliver")
+
+
+@pytest.mark.parametrize("enc,codec,dtype", [
+    ("fp_delta", "gzip", np.float64),
+    ("raw", "none", np.float64),
+    ("raw", "gzip", np.float32),
+    ("fp_delta", "none", np.float32),
+])
+def test_reader_encodings_codecs_widths(tmp_path, enc, codec, dtype):
+    cols = DATASETS["eB"](n_points=2500)
+    if np.dtype(dtype) == np.float32:
+        cols = dataclasses.replace(
+            cols, x=cols.x.astype(np.float32), y=cols.y.astype(np.float32))
+    path = tmp_path / f"{enc}_{codec}_{np.dtype(dtype).name}.spqf"
+    write_file(path, columns=cols, codec=codec, encoding=enc,
+               page_values=700, row_group_records=900)
+    with SpatialParquetReader(path) as r:
+        g0, _, _ = r.read_columnar()
+        for frac in (0.2, 0.7):
+            bbox = _quantile_bbox(g0, frac)
+            assert_same_result(
+                r.read_columnar(bbox=bbox, refine=True),
+                r.read_columnar(bbox=bbox, refine=True, device="jax"),
+                (enc, codec, frac))
+
+
+def test_reader_boundary_layouts(tmp_path):
+    """Records at page and row-group boundaries: tiny pages force every
+    record to sit against a boundary; oversized records get solo pages."""
+    cols = DATASETS["PT"](n_traj=90)  # trajectories of ~50 points
+    path = tmp_path / "tiny_pages.spqf"
+    # page_values far below a single trajectory: one record per page, and
+    # row groups of 7 records so runs straddle row-group boundaries
+    write_file(path, columns=cols, codec="none", sort="hilbert",
+               page_values=16, row_group_records=7)
+    with SpatialParquetReader(path) as r:
+        assert r.footer["row_groups"][0]["x_pages"][0]["rec_count"] >= 1
+        g0, _, _ = r.read_columnar()
+        for frac in (0.15, 0.5, 0.9):
+            bbox = _quantile_bbox(g0, frac)
+            assert_same_result(
+                r.read_columnar(bbox=bbox, refine=True),
+                r.read_columnar(bbox=bbox, refine=True, device="jax"),
+                frac)
+
+
+def test_reader_empty_and_collection_records(tmp_path):
+    """Empty geometries (no coordinates) are dropped by refine on both
+    paths, kept by plain reads on both paths."""
+    n = 40
+    types = np.full(n, 1, np.uint8)
+    parts_per = np.ones(n, np.int64)
+    parts_per[::5] = 0  # every 5th record empty
+    types[::5] = 0
+    n_vals = int((parts_per > 0).sum())
+    coords = np.stack([np.linspace(0, 1, n_vals),
+                       np.linspace(0, 1, n_vals)], 1)
+    cols = from_ragged(types, coords, np.ones(n_vals, np.int64), parts_per)
+    path = tmp_path / "empties.spqf"
+    write_file(path, columns=cols, codec="none", page_values=8)
+    with SpatialParquetReader(path) as r:
+        bbox = (0.0, 0.0, 0.6, 0.6)
+        assert_same_result(
+            r.read_columnar(bbox=bbox, refine=True),
+            r.read_columnar(bbox=bbox, refine=True, device="jax"),
+            "empties")
+        host = r.read_columnar(bbox=bbox, refine=True)
+        assert host[0].n_records < host[2].records_scanned
+
+
+def test_fused_chunking_and_host_pair_fallback(tmp_path, monkeypatch):
+    """With a tiny launch cap the fused path must split page pairs across
+    launches, and host-decode pairs too large for any launch — same record
+    set and bits either way."""
+    import repro.kernels.fp_delta.ops as fpd_ops
+
+    path = _pt_file(tmp_path, name="chunk.spqf", page_values=256)
+    with SpatialParquetReader(path) as r:
+        g0, _, _ = r.read_columnar()
+        bbox = _quantile_bbox(g0, 0.6)
+        host = r.read_columnar(bbox=bbox, refine=True)
+        monkeypatch.setattr(fpd_ops, "_MAX_LAUNCH_BITS", 8192)  # ~1 pair/launch
+        assert_same_result(
+            host, r.read_columnar(bbox=bbox, refine=True, device="jax"),
+            "multi-chunk")
+        monkeypatch.setattr(fpd_ops, "_MAX_LAUNCH_BITS", 1024)  # pairs too big
+        assert_same_result(
+            host, r.read_columnar(bbox=bbox, refine=True, device="jax"),
+            "host-pair fallback")
+
+
+def test_reader_geometry_collections(tmp_path, rng):
+    """Multi-sub-geometry records (GeometryCollections with embedded empty
+    sub-geometries) keep their type_rep structure through the fused filter."""
+    from repro.core.columnar import shred
+    from repro.core.geometry import (
+        TYPE_GEOMETRYCOLLECTION,
+        TYPE_LINESTRING,
+        TYPE_POINT,
+        Geometry,
+    )
+
+    geoms = []
+    for i in range(60):
+        if i % 3 == 0:
+            geoms.append(Geometry(TYPE_POINT, [rng.uniform(0, 10, (1, 2))]))
+        elif i % 3 == 1:
+            geoms.append(Geometry(TYPE_LINESTRING, [rng.uniform(0, 10, (4, 2))]))
+        else:
+            subs = [Geometry(TYPE_POINT, [rng.uniform(0, 10, (1, 2))]),
+                    Geometry.empty(),
+                    Geometry(TYPE_LINESTRING, [rng.uniform(0, 10, (3, 2))])]
+            geoms.append(Geometry(TYPE_GEOMETRYCOLLECTION, [], subs))
+    path = tmp_path / "collections.spqf"
+    write_file(path, columns=shred(geoms), codec="none", page_values=12)
+    with SpatialParquetReader(path) as r:
+        for bbox in [(1.0, 1.0, 6.0, 6.0), (0.0, 0.0, 10.0, 10.0),
+                     (9.9, 9.9, 9.95, 9.95)]:
+            assert_same_result(
+                r.read_columnar(bbox=bbox, refine=True),
+                r.read_columnar(bbox=bbox, refine=True, device="jax"),
+                bbox)
+
+
+def test_extras_filtered_through_fused_refine(tmp_path, rng):
+    """Extra columns (multi-dtype) are record-filtered by the device mask
+    exactly like the host path, including column projections."""
+    from repro.core.columnar import assemble
+    from repro.core.writer import SpatialParquetWriter
+
+    geoms = assemble(DATASETS["PT"](n_traj=150))
+    n = len(geoms)
+    extra = {"ts": np.arange(n, dtype=np.int64),
+             "w": rng.normal(0, 1, n).astype(np.float32)}
+    path = tmp_path / "extras.spqf"
+    with SpatialParquetWriter(path, codec="none", page_values=512,
+                              extra_schema={"ts": "<i8", "w": "<f4"}) as wtr:
+        wtr.write_geometries(geoms, extra=extra)
+    with SpatialParquetReader(path) as r:
+        g0, e0, _ = r.read_columnar()
+        assert set(e0) == {"ts", "w"}
+        bbox = _quantile_bbox(g0, 0.5)
+        host = r.read_columnar(bbox=bbox, refine=True)
+        assert 0 < len(host[1]["ts"]) < n  # the refine actually filtered
+        assert_same_result(
+            host, r.read_columnar(bbox=bbox, refine=True, device="jax"),
+            "extras")
+        assert_same_result(
+            r.read_columnar(bbox=bbox, columns=("geometry", "w"), refine=True),
+            r.read_columnar(bbox=bbox, columns=("geometry", "w"), refine=True,
+                            device="jax"),
+            "projection")
+
+
+def test_keep_on_device_roundtrip(tmp_path):
+    path = _pt_file(tmp_path)
+    with SpatialParquetReader(path) as r:
+        g0, _, _ = r.read_columnar()
+        bbox = _quantile_bbox(g0, 0.4)
+        gh, eh, sh = r.read_columnar(bbox=bbox, refine=True)
+        gk, ek, sk = r.read_columnar(bbox=bbox, refine=True, device="jax",
+                                     keep_on_device=True)
+        assert isinstance(gk.x, DeviceCoords) and isinstance(gk.y, DeviceCoords)
+        assert len(gk.x) == gh.n_values  # structural API works device-side
+        assert gk.n_records == gh.n_records
+        host = gk.coords_to_host()
+        assert np.array_equal(_ib(gh.x), _ib(host.x))
+        assert np.array_equal(_ib(gh.y), _ib(host.y))
+        assert sh == sk
+        # plain full read may also stay device-resident
+        gk2, _, _ = r.read_columnar(device="jax", keep_on_device=True)
+        assert np.array_equal(_ib(g0.x), _ib(gk2.coords_to_host().x))
+        with pytest.raises(ValueError, match="keep_on_device"):
+            r.read_columnar(keep_on_device=True)
+
+
+def test_float32_bound_rounding_gap(tmp_path):
+    """A float32 coordinate in the rounding gap of a float64 query bound:
+    np.float32(0.1) == 0.10000000149 > 0.1, so the host drops it — the
+    device bound must tighten to the largest f32 <= 0.1 (regression: NEP 50
+    weak promotion silently skipped the tightening)."""
+    from repro.kernels.minmax.ref import _canonical_bound
+
+    assert float(_canonical_bound(0.1, np.float32, "hi")) < 0.1
+    assert float(_canonical_bound(0.1, np.float32, "lo")) > 0.1
+    assert float(_canonical_bound(1e300, np.float32, "hi")) == float(
+        np.finfo(np.float32).max)
+    n = 32
+    xs = np.full(n, np.float32(0.1))  # all sit just above the f64 bound
+    ys = np.linspace(0, 1, n).astype(np.float32)
+    cols = from_ragged(np.full(n, 1, np.uint8),
+                       np.stack([xs, ys], 1).astype(np.float64),
+                       np.ones(n, np.int64), np.ones(n, np.int64))
+    cols = dataclasses.replace(cols, x=xs, y=ys)
+    path = tmp_path / "gap.spqf"
+    write_file(path, columns=cols, codec="none", page_values=8)
+    with SpatialParquetReader(path) as r:
+        for bbox in [(0.0, 0.0, 0.1, 1.0),     # hi bound in the gap: drop all
+                     (0.1, 0.0, 1.0, 1.0),     # lo bound in the gap: drop all
+                     (0.0, 0.0, 0.2, 1.0)]:    # clear of the gap: keep all
+            assert_same_result(
+                r.read_columnar(bbox=bbox, refine=True),
+                r.read_columnar(bbox=bbox, refine=True, device="jax"),
+                bbox)
+        assert r.read_columnar(bbox=(0.0, 0.0, 0.1, 1.0), refine=True,
+                               device="jax")[2].records_returned == 0
+
+
+def test_device_coords_numpy_roundtrip(rng):
+    for dtype in (np.float64, np.float32):
+        arr = rng.normal(0, 1, 257).astype(dtype)
+        arr[3] = np.nan
+        back = DeviceCoords.from_numpy(arr).to_numpy()
+        assert np.array_equal(_ib(arr), _ib(back))
+
+
+def test_double_buffered_row_groups_equivalence(tmp_path):
+    """prefetch_row_groups ∈ {0, 1, 3} are byte-identical, with and without
+    the fused device path."""
+    cols = DATASETS["PT"](n_traj=200)
+    path = tmp_path / "multirg.spqf"
+    write_file(path, columns=cols, codec="none", sort="hilbert",
+               page_values=256, row_group_records=25)
+    results = []
+    for pf in (0, 1, 3):
+        with SpatialParquetReader(path, prefetch_row_groups=pf) as r:
+            assert len(r.footer["row_groups"]) > 3
+            g0, e0, s0 = r.read_columnar()
+            bbox = _quantile_bbox(g0, 0.5)
+            results.append((
+                (g0, e0, s0),
+                r.read_columnar(bbox=bbox, refine=True),
+                r.read_columnar(bbox=bbox, refine=True, device="jax"),
+            ))
+    for later in results[1:]:
+        for a, b in zip(results[0], later):
+            assert_same_result(a, b, "prefetch")
+
+
+# ---------------------------------------------------------- scanner-level
+def test_scanner_fused_refine(tmp_path):
+    from repro.dataset import SpatialDatasetScanner, write_dataset
+
+    cols = DATASETS["PT"](n_traj=120)
+    root = tmp_path / "ds"
+    write_dataset(root, columns=cols, n_shards=3, sort="hilbert", codec="none")
+    sc = SpatialDatasetScanner(root, max_workers=3)
+    x0, y0, x1, y1 = sc.manifest.mbr
+    for fx in (0.3, 0.7, 1.0):
+        bbox = (x0, y0, x0 + (x1 - x0) * fx, y0 + (y1 - y0) * fx)
+        host = sc.scan(bbox=bbox, refine=True)
+        dev = sc.scan(bbox=bbox, refine=True, device="jax")
+        assert_same_result(host, dev, fx)
+        kod = sc.scan(bbox=bbox, refine=True, device="jax",
+                      keep_on_device=True)
+        assert isinstance(kod[0].x, DeviceCoords)
+        assert np.array_equal(_ib(host[0].x), _ib(kod[0].coords_to_host().x))
+        assert host[2] == kod[2]
+
+
+def test_scanner_compile_cache_stable_across_scans(tmp_path):
+    """The AOT cache is shared across worker threads: a repeated 4-shard
+    device scan must not trace any new shape bucket."""
+    from repro.dataset import SpatialDatasetScanner, write_dataset
+
+    cols = DATASETS["PT"](n_traj=100)
+    root = tmp_path / "ds_cache"
+    write_dataset(root, columns=cols, n_shards=4, sort="hilbert", codec="none")
+    sc = SpatialDatasetScanner(root, max_workers=4)
+    x0, y0, x1, y1 = sc.manifest.mbr
+    bbox = (x0, y0, x0 + (x1 - x0) / 2, y0 + (y1 - y0) / 2)
+    sc.scan(bbox=bbox, refine=True, device="jax")
+    n1 = compile_cache_stats()["count"]
+    assert n1 > 0
+    sc.scan(bbox=bbox, refine=True, device="jax")
+    sc.scan(bbox=bbox, refine=True, device="jax", keep_on_device=True)
+    assert compile_cache_stats()["count"] == n1
+
+
+# ----------------------------------------------------------- pipeline-level
+def test_pipeline_device_batches_identical(tmp_path):
+    from repro.data.pipeline import TrajectoryBatcher
+    from repro.data.tokenizer import GeoTokenizer
+    from repro.dataset import write_dataset
+
+    cols = DATASETS["PT"](n_traj=80)
+    root = tmp_path / "ds_pipe"
+    write_dataset(root, columns=cols, n_shards=2, sort="hilbert", codec="none")
+    x = np.asarray(cols.x, np.float64)
+    y = np.asarray(cols.y, np.float64)
+    full = (float(x.min()), float(y.min()), float(x.max()), float(y.max()))
+    bbox = (full[0], full[1],
+            full[0] + (full[2] - full[0]) * 0.7,
+            full[1] + (full[3] - full[1]) * 0.7)
+    tok = GeoTokenizer(full)
+    kw = dict(seq_len=24, global_batch=4, bbox=bbox, seed=11, loop=False)
+    host = [b["tokens"] for _, b in zip(range(3), TrajectoryBatcher([root], tok, **kw))]
+    dev = [b["tokens"] for _, b in zip(
+        range(3), TrajectoryBatcher([root], tok, device="jax", **kw))]
+    assert len(host) == len(dev) > 0
+    for a, b in zip(host, dev):
+        assert np.array_equal(a, b)
+
+
+# --------------------------------------------------- batched page statistics
+def test_column_page_stats_batched_matches_loop(rng):
+    """The single-launch batched column_page_stats equals the per-page
+    reference (incl. empty pages -> (inf, -inf))."""
+    from repro.kernels.minmax import column_page_stats, page_minmax
+
+    values = rng.normal(0, 100, 5000).astype(np.float32)
+    bounds = np.unique(rng.integers(0, len(values), 37))
+    bounds = np.concatenate([[0], bounds, [len(values)], [len(values)]])
+    bounds = np.sort(bounds).astype(np.int64)  # incl. a trailing empty page
+    mn, mx = column_page_stats(values, bounds)
+    for i in range(len(bounds) - 1):
+        chunk = values[bounds[i]: bounds[i + 1]]
+        if not len(chunk):
+            assert mn[i] == np.inf and mx[i] == -np.inf
+        else:
+            assert mn[i] == chunk.min() and mx[i] == chunk.max()
+    # one launch: a single page_minmax call underneath (smoke: big ragged set)
+    mn0, mx0 = column_page_stats(np.zeros(0, np.float32), np.zeros(1, np.int64))
+    assert len(mn0) == 0 and len(mx0) == 0
+
+
+# ------------------------------------------------- adversarial property tests
+def _refine_roundtrip(seed):
+    rng = np.random.default_rng(seed)
+    dtype = np.float64 if seed % 2 == 0 else np.float32
+    n_rec = int(rng.integers(1, 40))
+    counts = rng.integers(0, 15, n_rec)
+    total = int(counts.sum())
+    pool = np.array([0.0, -0.0, np.inf, -np.inf, np.nan, 1e-300, -1.5, 2.5,
+                     5e-324, 3.14])
+    x = pool[rng.integers(0, len(pool), max(total, 1))][:total].astype(dtype)
+    y = rng.normal(0, 2, total).astype(dtype)
+    split = int(rng.integers(0, n_rec + 1))
+    vs = int(counts[:split].sum())
+    pairs = [(0, split), (split, n_rec)]
+    qs = rng.normal(0, 2, 4)
+    bbox = (min(qs[0], qs[1]), min(qs[2], qs[3]),
+            max(qs[0], qs[1]), max(qs[2], qs[3]))
+    stream, aux, res = _refine_direct(
+        [x[:vs], x[vs:]], [y[:vs], y[vs:]], counts, pairs, bbox,
+        np.dtype(dtype), True)
+    oracle = _bbox_keep_mask(x, y, counts, bbox)
+    assert np.array_equal(res.keep, oracle), seed
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=25, deadline=None)
+    @given(seed=hyp_st.integers(0, 2**32 - 1))
+    def test_property_refine_mask(seed):
+        _refine_roundtrip(seed)
+
+else:  # deterministic fallback, PR 1 convention: run, don't skip
+
+    @pytest.mark.parametrize("seed", _SEEDS)
+    def test_property_refine_mask(seed):
+        _refine_roundtrip(seed)
