@@ -17,8 +17,11 @@ correctness-plane trajectories in CI, not speedups. Also recorded:
 ``file_bytes``, ``raw_coord_bytes``, ``n_records``, ``n_values``, plus the
 sharded-dataset trajectory: ``dataset_write_s``, ``dataset_scan_s`` (async
 full scan over ``dataset_n_shards`` shards), ``dataset_scan_bbox_s`` and its
-pruning ratio ``dataset_bbox_bytes_read``/``dataset_bytes_total``. Timings
-are best-of-N to shrink scheduler noise.
+pruning ratio ``dataset_bbox_bytes_read``/``dataset_bytes_total``, plus the
+fault-tolerant remote path: ``remote_scan_s`` (full read through a
+``RemoteRangeSource`` over an in-process range-GET server, ``cold_cache``
+vs ``warm_cache`` block cache). Timings are best-of-N to shrink scheduler
+noise.
 """
 
 from __future__ import annotations
@@ -36,6 +39,7 @@ import numpy as np
 from repro.core.reader import SpatialParquetReader
 from repro.core.writer import write_file
 from repro.dataset import SpatialDatasetScanner, write_dataset
+from repro.io import InProcessRangeServer, RemoteRangeSource
 
 from .common import SCALE_1, make_dataset, tmppath
 
@@ -107,6 +111,23 @@ def run(scale: float = 0.25, dataset: str = "PT", repeats: int = 3,
                 })
             device_refine_s = refine_sweep[-1]["device_refine_s"]
 
+        # remote (object-store-style) scan through the fault-tolerant
+        # source: in-process range-GET server, cold vs warm block cache
+        server = InProcessRangeServer(path)
+
+        def remote_scan_cold():
+            with SpatialParquetReader(source=RemoteRangeSource(server)) as rr:
+                rr.read_columnar()
+
+        remote_scan_cold_s = min(
+            _timed(remote_scan_cold) for _ in range(repeats)
+        )
+        with SpatialParquetReader(source=RemoteRangeSource(server)) as rr:
+            rr.read_columnar()  # populate the block cache off the clock
+            remote_scan_warm_s = min(
+                _timed(lambda: rr.read_columnar()) for _ in range(repeats)
+            )
+
         # sharded dataset: async full scan + shard-pruned bbox scan
         dataset_write_s = min(
             _timed(lambda: write_dataset(
@@ -146,6 +167,10 @@ def run(scale: float = 0.25, dataset: str = "PT", repeats: int = 3,
         "dataset_bbox_bytes_read": dstats.bytes_read,
         "dataset_bytes_total": dstats.bytes_total,
         "dataset_bbox_shards_read": dstats.shards_read,
+        "remote_scan_s": {
+            "cold_cache": round(remote_scan_cold_s, 6),
+            "warm_cache": round(remote_scan_warm_s, 6),
+        },
         "n_records": int(geo.n_records),
         "n_values": int(geo.n_values),
         "python": platform.python_version(),

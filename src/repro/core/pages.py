@@ -106,9 +106,15 @@ class PageMeta:
     encoding: str
     n_bits: int             # FP-delta n* (0 => raw mode inside fp_delta)
     n_resets: int
+    crc: int | None = None  # checksum of the stored bytes (format v2 files)
 
     def to_dict(self) -> dict:
-        return self.__dict__.copy()
+        d = self.__dict__.copy()
+        if d.get("crc") is None:
+            # v1 files carry no checksums; omitting the key keeps their
+            # footers byte-identical to the pre-checksum format
+            del d["crc"]
+        return d
 
     @staticmethod
     def from_dict(d: dict) -> "PageMeta":

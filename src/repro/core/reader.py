@@ -66,6 +66,23 @@ record set is bit-identical to the host refine. ``keep_on_device=True``
 additionally leaves the surviving coordinates on the accelerator, returning
 :class:`~repro.core.columnar.DeviceCoords` columns for zero-copy handoff
 into downstream device consumers (``repro.data.pipeline``).
+
+Fault-tolerant storage boundary (``repro.io``)
+----------------------------------------------
+
+The reader no longer touches a file handle directly: all I/O goes through a
+:class:`~repro.io.source.ByteRangeSource`. The default
+:class:`~repro.io.source.LocalFileSource` preserves the historical
+``seek``+``readinto``-per-merged-run behaviour byte-for-byte; passing
+``source=RemoteRangeSource(...)`` runs the identical read path against an
+object-store-style backend with retries, deadlines and a read-through block
+cache. Format-v2 files carry per-blob checksums which are verified on every
+stored blob *before* it is decompressed, planned or launched (host and
+device paths alike); a mismatch triggers one cache-bypassing re-fetch (which
+heals a poisoned block cache) and raises an attributed
+:class:`~repro.io.checksum.ChecksumError` only if the bytes are still wrong.
+All recoveries are counted in :class:`ReadStats` (``retries``, ``timeouts``,
+``checksum_failures``, ``cache_hits``/``cache_misses``).
 """
 
 from __future__ import annotations
@@ -73,10 +90,13 @@ from __future__ import annotations
 import struct
 from bisect import bisect_right
 from collections import deque
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 
 import msgpack
 import numpy as np
+
+from repro.io.checksum import ChecksumError, checksum_fn, crc32c
+from repro.io.source import LocalFileSource
 
 from .columnar import DeviceCoords, GeometryColumns, assemble
 from .fp_delta import fp_delta_execute
@@ -91,7 +111,7 @@ from .pages import (
     page_stream_plan,
 )
 from .rle import decode_levels, rle_decode
-from .writer import MAGIC, permute_records
+from .writer import MAGIC, MAGIC_V2, permute_records
 
 _LEVEL_NAMES = ("type", "type_rep", "rep", "defn")
 
@@ -126,6 +146,16 @@ class ReadStats:
     aggregate. ``shards_total``/``shards_read`` stay 0 for single-file reads
     and are filled in by the dataset scanner, where pruned shards contribute
     their page/byte totals but nothing to the ``*_read`` side.
+
+    Recovery accounting (the fault-tolerant I/O layer): ``retries`` counts
+    re-issued range requests (backoff retries inside a
+    :class:`~repro.io.remote.RemoteRangeSource` plus checksum-triggered blob
+    re-fetches), ``timeouts`` the requests dropped for missing their
+    deadline, ``checksum_failures`` every blob whose stored CRC mismatched
+    (recovered or not), ``cache_hits``/``cache_misses`` the remote block
+    cache, ``shard_retries`` scanner-level shard re-reads, and ``failures``
+    the attributed record of shards a ``skip``-policy scan dropped (list of
+    :class:`~repro.dataset.errors.ShardFailure`).
     """
 
     pages_total: int = 0
@@ -136,6 +166,13 @@ class ReadStats:
     records_returned: int = 0
     shards_total: int = 0
     shards_read: int = 0
+    retries: int = 0
+    timeouts: int = 0
+    checksum_failures: int = 0
+    cache_hits: int = 0
+    cache_misses: int = 0
+    shard_retries: int = 0
+    failures: list = field(default_factory=list)
 
     @property
     def pages_skipped(self) -> int:
@@ -144,6 +181,10 @@ class ReadStats:
     @property
     def shards_skipped(self) -> int:
         return self.shards_total - self.shards_read
+
+    @property
+    def shards_failed(self) -> int:
+        return len(self.failures)
 
     def merge(self, other: "ReadStats") -> "ReadStats":
         """Field-wise sum of two accounts (one aggregate per dataset scan)."""
@@ -156,6 +197,13 @@ class ReadStats:
             records_returned=self.records_returned + other.records_returned,
             shards_total=self.shards_total + other.shards_total,
             shards_read=self.shards_read + other.shards_read,
+            retries=self.retries + other.retries,
+            timeouts=self.timeouts + other.timeouts,
+            checksum_failures=self.checksum_failures + other.checksum_failures,
+            cache_hits=self.cache_hits + other.cache_hits,
+            cache_misses=self.cache_misses + other.cache_misses,
+            shard_retries=self.shard_retries + other.shard_retries,
+            failures=self.failures + other.failures,
         )
 
     def __add__(self, other):
@@ -170,9 +218,13 @@ class ReadStats:
 
 
 class _CoalescedRanges:
-    """Merge (offset, nbytes) requests and serve blobs from batched reads."""
+    """Merge (offset, nbytes) requests and serve blobs from batched reads.
 
-    def __init__(self, fh, ranges: list[tuple[int, int]], max_gap: int):
+    One ``readinto_at`` per merged run — for a :class:`LocalFileSource` that
+    is the historical single ``seek``+``readinto`` syscall pair, verbatim.
+    """
+
+    def __init__(self, source, ranges: list[tuple[int, int]], max_gap: int):
         spans = sorted(set(r for r in ranges if r[1] > 0))
         merged: list[list[int]] = []
         for off, nb in spans:
@@ -180,13 +232,13 @@ class _CoalescedRanges:
                 merged[-1][1] = max(merged[-1][1], off + nb)
             else:
                 merged.append([off, off + nb])
+        self._source = source
         self._starts = [m[0] for m in merged]
         self._bufs: list[memoryview] = []
         self.n_reads = 0
         for start, end in merged:
             buf = bytearray(end - start)
-            fh.seek(start)
-            got = fh.readinto(buf)
+            got = source.readinto_at(start, buf)
             if got != len(buf):
                 raise IOError("short read (truncated Spatial Parquet file)")
             self.n_reads += 1
@@ -197,16 +249,23 @@ class _CoalescedRanges:
         rel = offset - self._starts[i]
         return self._bufs[i][rel : rel + nbytes]
 
+    def refetch(self, offset: int, nbytes: int) -> bytes:
+        """Re-read one blob straight from storage, bypassing (and healing)
+        any cache layer — the checksum-mismatch recovery path."""
+        return self._source.read_at(offset, nbytes, refresh=True)
+
 
 class _DirectRanges:
-    """One seek+read per blob (legacy path; kept for equivalence testing)."""
+    """One read per blob (legacy path; kept for equivalence testing)."""
 
-    def __init__(self, fh):
-        self._fh = fh
+    def __init__(self, source):
+        self._source = source
 
     def blob(self, offset: int, nbytes: int) -> bytes:
-        self._fh.seek(offset)
-        return self._fh.read(nbytes)
+        return self._source.read_at(offset, nbytes)
+
+    def refetch(self, offset: int, nbytes: int) -> bytes:
+        return self._source.read_at(offset, nbytes, refresh=True)
 
 
 @dataclass
@@ -258,22 +317,51 @@ class _RowGroupLevels:
 
 
 class SpatialParquetReader:
-    def __init__(self, path, *, coalesce_max_gap: int = 1 << 16,
-                 prefetch_row_groups: int = 1):
-        self.path = str(path)
+    """Reader over one ``.spqf`` object.
+
+    ``path`` opens a :class:`~repro.io.source.LocalFileSource`; pass
+    ``source=`` instead (e.g. a :class:`~repro.io.remote.RemoteRangeSource`)
+    to read the same bytes from elsewhere — the reader owns whichever source
+    it ends up with and closes it. ``verify_checksums=False`` skips the v2
+    integrity checks (v1 files carry none and are never verified).
+    """
+
+    def __init__(self, path=None, *, source=None, coalesce_max_gap: int = 1 << 16,
+                 prefetch_row_groups: int = 1, verify_checksums: bool = True):
+        if source is None:
+            if path is None:
+                raise ValueError("SpatialParquetReader needs a path or a source")
+            source = LocalFileSource(path)
+        self.path = str(path) if path is not None else getattr(
+            source, "path", "<source>")
         self.coalesce_max_gap = int(coalesce_max_gap)
         self.prefetch_row_groups = max(0, int(prefetch_row_groups))
-        self._fh = open(self.path, "rb")
-        self.footer = self._read_footer()
-        self.coord_dtype = np.dtype(self.footer["coord_dtype"])
-        self.codec = self.footer["codec"]
-        self.n_records = self.footer["n_records"]
-        self.extra_schema = self.footer.get("extra_schema", {})
-        self.index = SpatialIndex(self.footer)
-        self._data_bytes = self._total_data_bytes()
+        self._source = source
+        self._closed = False
+        try:
+            self.footer = self._read_footer()
+            self.coord_dtype = np.dtype(self.footer["coord_dtype"])
+            self.codec = self.footer["codec"]
+            self.n_records = self.footer["n_records"]
+            self.extra_schema = self.footer.get("extra_schema", {})
+            self.checksum_algo = self.footer.get("checksum_algo")
+            self._verify = bool(verify_checksums) and self.checksum_algo is not None
+            self._blob_crc = checksum_fn(self.checksum_algo) if self._verify else None
+            self.index = SpatialIndex(self.footer)
+            self._data_bytes = self._total_data_bytes()
+        except Exception:
+            # never leak the handle/source when construction fails mid-way
+            self.close()
+            raise
+
+    @property
+    def closed(self) -> bool:
+        return self._closed
 
     def close(self):
-        self._fh.close()
+        if not self._closed:
+            self._closed = True
+            self._source.close()
 
     def __enter__(self):
         return self
@@ -283,16 +371,56 @@ class SpatialParquetReader:
 
     # ------------------------------------------------------------- internals
     def _read_footer(self) -> dict:
-        fh = self._fh
-        fh.seek(0)
-        if fh.read(len(MAGIC)) != MAGIC:
+        src = self._source
+        size = src.size()
+        if size < 2 * len(MAGIC) + 4:
+            raise ValueError("truncated Spatial Parquet file (too short)")
+        lead = src.read_at(0, len(MAGIC))
+        if lead not in (MAGIC, MAGIC_V2):
             raise ValueError("not a Spatial Parquet file (bad leading magic)")
-        fh.seek(-(len(MAGIC) + 4), 2)
-        (flen,) = struct.unpack("<I", fh.read(4))
-        if fh.read(len(MAGIC)) != MAGIC:
+        tail = src.read_at(size - len(MAGIC) - 4, len(MAGIC) + 4)
+        (flen,) = struct.unpack("<I", tail[:4])
+        trail = tail[4:]
+        if trail not in (MAGIC, MAGIC_V2):
             raise ValueError("truncated Spatial Parquet file (bad trailing magic)")
-        fh.seek(-(len(MAGIC) + 4 + flen), 2)
-        return msgpack.unpackb(fh.read(flen), raw=False, strict_map_key=False)
+        if flen > size - 2 * len(MAGIC) - 4:
+            raise ValueError("truncated Spatial Parquet file (bad footer length)")
+        stored = src.read_at(size - len(MAGIC) - 4 - flen, flen)
+        if trail == MAGIC_V2:
+            # v2 trailer: [footer][crc32c(footer): u32]; verify before unpack
+            # so a corrupt footer never feeds garbage to msgpack / the index
+            blob, crc_bytes = stored[:-4], stored[-4:]
+            (want,) = struct.unpack("<I", crc_bytes)
+            got = crc32c(blob)
+            if got != want:
+                raise ChecksumError("file footer", size - len(MAGIC) - 4 - flen,
+                                    len(blob), want, got)
+        else:
+            blob = stored
+        return msgpack.unpackb(blob, raw=False, strict_map_key=False)
+
+    def _checked_blob(self, src, offset: int, nbytes: int,
+                      crc: int | None, stats: ReadStats, what: str):
+        """Fetch one stored blob, verifying its v2 checksum when present.
+
+        A mismatch triggers exactly one cache-bypassing re-fetch (healing a
+        poisoned remote block cache); if the fresh bytes still mismatch, the
+        blob is genuinely corrupt and an attributed ChecksumError raises
+        *before* any decompress/decode/launch consumes it.
+        """
+        blob = src.blob(offset, nbytes)
+        if not self._verify or crc is None:
+            return blob
+        got = self._blob_crc(blob)
+        if got == crc:
+            return blob
+        stats.checksum_failures += 1
+        fresh = src.refetch(offset, nbytes)
+        stats.retries += 1
+        got = self._blob_crc(fresh)
+        if got == crc and len(fresh) == nbytes:
+            return fresh
+        raise ChecksumError(what, offset, nbytes, crc, got)
 
     def _total_data_bytes(self) -> int:
         return footer_data_bytes(self.footer)
@@ -324,20 +452,22 @@ class SpatialParquetReader:
                 ))
         return ranges
 
+    def _level_blob(self, src, rg, name: str, stats: ReadStats):
+        meta = rg[name]
+        return self._checked_blob(src, meta["offset"], meta["nbytes"],
+                                  meta.get("crc"), stats,
+                                  f"{name!r} level stream")
+
     def _decode_rg_levels(self, src, rg, stats: ReadStats) -> _RowGroupLevels:
         """Decode one row group's four level streams from memory slices."""
         types = rle_decode(
-            decompress(src.blob(rg["type"]["offset"], rg["type"]["nbytes"]),
-                       self.codec))
+            decompress(self._level_blob(src, rg, "type", stats), self.codec))
         type_rep = decode_levels(
-            decompress(src.blob(rg["type_rep"]["offset"], rg["type_rep"]["nbytes"]),
-                       self.codec))
+            decompress(self._level_blob(src, rg, "type_rep", stats), self.codec))
         rep = decode_levels(
-            decompress(src.blob(rg["rep"]["offset"], rg["rep"]["nbytes"]),
-                       self.codec))
+            decompress(self._level_blob(src, rg, "rep", stats), self.codec))
         defn = decode_levels(
-            decompress(src.blob(rg["defn"]["offset"], rg["defn"]["nbytes"]),
-                       self.codec))
+            decompress(self._level_blob(src, rg, "defn", stats), self.codec))
         stats.bytes_read += sum(rg[name]["nbytes"] for name in _LEVEL_NAMES)
         return _RowGroupLevels(types, type_rep, rep, defn,
                                np.flatnonzero(rep == 0),
@@ -351,8 +481,11 @@ class SpatialParquetReader:
             wk = we
             for p in range(p0, p1):
                 meta = PageMeta.from_dict(ep[p])
+                blob = self._checked_blob(
+                    src, meta.offset, meta.nbytes, meta.crc, stats,
+                    f"extra column {k!r} page {p}")
                 decode_page(
-                    src.blob(meta.offset, meta.nbytes), meta,
+                    blob, meta,
                     np.dtype(self.extra_schema[k]), self.codec,
                     out=extra_all[k][wk : wk + meta.count],
                 )
@@ -365,17 +498,22 @@ class SpatialParquetReader:
         With coalescing on and ``prefetch_row_groups >= 1``, a single worker
         thread runs row group N+1's ``readinto`` calls while the caller
         decodes row group N (file I/O releases the GIL; the main thread only
-        touches prefilled buffers, never the file handle). Yields in file
-        order, so results are byte-identical to the sequential path.
+        touches prefilled buffers, never the source). Yields in file order,
+        so results are byte-identical to the sequential path.
+
+        The read loops close this generator in a ``finally`` (triggering
+        ``GeneratorExit`` here), so the pool's ``with`` block always joins
+        the prefetch thread — including when a decode raises mid-row-group.
         """
         if not coalesce:
             for it in items:
-                yield it, _DirectRanges(self._fh)
+                yield it, _DirectRanges(self._source)
             return
         lookahead = self.prefetch_row_groups
         if lookahead == 0 or len(items) <= 1:
             for it in items:
-                yield it, _CoalescedRanges(self._fh, it[-1], self.coalesce_max_gap)
+                yield it, _CoalescedRanges(self._source, it[-1],
+                                           self.coalesce_max_gap)
             return
         from concurrent.futures import ThreadPoolExecutor
 
@@ -384,14 +522,14 @@ class SpatialParquetReader:
             nxt = 0
             while nxt < len(items) and len(pending) < lookahead:
                 pending.append(pool.submit(
-                    _CoalescedRanges, self._fh, items[nxt][-1],
+                    _CoalescedRanges, self._source, items[nxt][-1],
                     self.coalesce_max_gap))
                 nxt += 1
             for it in items:
                 src = pending.popleft().result()
                 if nxt < len(items):
                     pending.append(pool.submit(
-                        _CoalescedRanges, self._fh, items[nxt][-1],
+                        _CoalescedRanges, self._source, items[nxt][-1],
                         self.coalesce_max_gap))
                     nxt += 1
                 yield it, src
@@ -437,6 +575,7 @@ class SpatialParquetReader:
         )
         idx = self.index
         stats = ReadStats(pages_total=len(idx), bytes_total=self._data_bytes)
+        src_stats0 = self._source.stats.copy()
 
         # group hit-page runs by row group (runs arrive in file order)
         hit = idx.query(bbox)
@@ -464,9 +603,11 @@ class SpatialParquetReader:
                 raise ValueError("device refinement requires float coordinates")
             fused = False  # exotic int coords: decode on device, refine on host
         if fused:
-            return self._read_columnar_fused(
+            out = self._read_columnar_fused(
                 bbox, refine, coalesce, keep_on_device, want_extra,
                 items, stats, hit)
+            self._fold_source_stats(stats, src_stats0)
+            return out
 
         if use_device:
             # lazy: keeps jax out of host-only read paths
@@ -489,56 +630,63 @@ class SpatialParquetReader:
         w = 0   # value write cursor into x_all / y_all
         we = 0  # record write cursor into extra columns
         level_parts = (types_parts, type_rep_parts, rep_parts, defn_parts)
-        for (rg_i, rg, runs, base, extra_pages, _ranges), src in \
-                self._iter_sources(items, coalesce):
-            xp, yp = rg["x_pages"], rg["y_pages"]
-            if want_geom:
-                lv = self._decode_rg_levels(src, rg, stats)
-
-            deferred: list[tuple] = []  # (plan, dest array, dest offset)
-
-            def _coord_page(blob, meta, dest, off, cnt):
-                """Decode one coordinate page now (host) or defer it to the
-                row group's batched device launch (fp_delta pages only)."""
-                if use_device and meta.encoding == ENC_FP_DELTA:
-                    deferred.append(
-                        (page_plan(blob, meta, self.coord_dtype, self.codec),
-                         dest, off))
-                else:
-                    decode_page(blob, meta, self.coord_dtype, self.codec,
-                                out=dest[off : off + cnt])
-
-            for p0, p1 in runs:
-                j0, j1 = base + p0, base + p1 - 1
-                r0 = int(idx.rec_start[j0])
-                r1 = int(idx.rec_start[j1] + idx.rec_count[j1])
-                stats.records_scanned += r1 - r0
+        src_iter = self._iter_sources(items, coalesce)
+        try:
+            for (rg_i, rg, runs, base, extra_pages, _ranges), src in src_iter:
+                xp, yp = rg["x_pages"], rg["y_pages"]
                 if want_geom:
-                    for p in range(p0, p1):
-                        j = base + p
-                        cnt = int(idx.count[j])
-                        _coord_page(
-                            src.blob(int(idx.x_offset[j]), int(idx.x_nbytes[j])),
-                            PageMeta.from_dict(xp[p]), x_all, w, cnt)
-                        _coord_page(
-                            src.blob(int(idx.y_offset[j]), int(idx.y_nbytes[j])),
-                            PageMeta.from_dict(yp[p]), y_all, w, cnt)
-                        w += cnt
-                    stats.bytes_read += int(
-                        idx.x_nbytes[j0 : j1 + 1].sum() + idx.y_nbytes[j0 : j1 + 1].sum()
-                    )
-                    lv.append_run(level_parts, r0, r1)
-                self._decode_run_extras(src, extra_pages, extra_all, we,
-                                        p0, p1, stats)
-                we += r1 - r0
+                    lv = self._decode_rg_levels(src, rg, stats)
 
-            if deferred:
-                # one batched page-stream launch per row group; the decoded
-                # bits are copied into the preallocated columns dtype-blind
-                # (view) so float/int coordinate columns both stay bit-exact
-                outs = _device_decode_pages([p for p, _, _ in deferred])
-                for (plan, dest, off), vals in zip(deferred, outs):
-                    dest[off : off + plan.n_values] = vals.view(dest.dtype)
+                deferred: list[tuple] = []  # (plan, dest array, dest offset)
+
+                def _coord_page(axis, page_dict, j, p, dest, off, cnt):
+                    """Decode one coordinate page now (host) or defer it to
+                    the row group's batched device launch (fp_delta only)."""
+                    meta = PageMeta.from_dict(page_dict)
+                    blob = self._checked_blob(
+                        src,
+                        int(idx.x_offset[j] if axis == "x" else idx.y_offset[j]),
+                        int(idx.x_nbytes[j] if axis == "x" else idx.y_nbytes[j]),
+                        meta.crc, stats,
+                        f"{axis} page {p} of row group {rg_i}")
+                    if use_device and meta.encoding == ENC_FP_DELTA:
+                        deferred.append(
+                            (page_plan(blob, meta, self.coord_dtype, self.codec),
+                             dest, off))
+                    else:
+                        decode_page(blob, meta, self.coord_dtype, self.codec,
+                                    out=dest[off : off + cnt])
+
+                for p0, p1 in runs:
+                    j0, j1 = base + p0, base + p1 - 1
+                    r0 = int(idx.rec_start[j0])
+                    r1 = int(idx.rec_start[j1] + idx.rec_count[j1])
+                    stats.records_scanned += r1 - r0
+                    if want_geom:
+                        for p in range(p0, p1):
+                            j = base + p
+                            cnt = int(idx.count[j])
+                            _coord_page("x", xp[p], j, p, x_all, w, cnt)
+                            _coord_page("y", yp[p], j, p, y_all, w, cnt)
+                            w += cnt
+                        stats.bytes_read += int(
+                            idx.x_nbytes[j0 : j1 + 1].sum()
+                            + idx.y_nbytes[j0 : j1 + 1].sum()
+                        )
+                        lv.append_run(level_parts, r0, r1)
+                    self._decode_run_extras(src, extra_pages, extra_all, we,
+                                            p0, p1, stats)
+                    we += r1 - r0
+
+                if deferred:
+                    # one batched page-stream launch per row group; decoded
+                    # bits are copied into the preallocated columns dtype-
+                    # blind (view) so float/int columns both stay bit-exact
+                    outs = _device_decode_pages([p for p, _, _ in deferred])
+                    for (plan, dest, off), vals in zip(deferred, outs):
+                        dest[off : off + plan.n_values] = vals.view(dest.dtype)
+        finally:
+            src_iter.close()
 
         if want_geom and types_parts:
             geo = GeometryColumns(
@@ -558,7 +706,17 @@ class SpatialParquetReader:
         stats.records_returned = geo.n_records if geo is not None else (
             len(next(iter(extras.values()))) if extras else 0
         )
+        self._fold_source_stats(stats, src_stats0)
         return geo, extras, stats
+
+    def _fold_source_stats(self, stats: ReadStats, before) -> None:
+        """Fold the source's recovery counters accrued by this read into the
+        query's ReadStats (delta against the snapshot taken at entry)."""
+        d = self._source.stats - before
+        stats.retries += d.retries
+        stats.timeouts += d.timeouts
+        stats.cache_hits += d.cache_hits
+        stats.cache_misses += d.cache_misses
 
     # ------------------------------------------------------ fused device scan
     def _read_columnar_fused(self, bbox, refine, coalesce, keep_on_device,
@@ -602,79 +760,90 @@ class SpatialParquetReader:
         we = 0
 
         level_parts = (types_parts, type_rep_parts, rep_parts, defn_parts)
-        for (rg_i, rg, runs, base, extra_pages, _ranges), src in \
-                self._iter_sources(items, coalesce):
-            xp, yp = rg["x_pages"], rg["y_pages"]
-            lv = self._decode_rg_levels(src, rg, stats)
-            rec_vcounts_rg = lv.record_value_counts()
+        src_iter = self._iter_sources(items, coalesce)
+        try:
+            for (rg_i, rg, runs, base, extra_pages, _ranges), src in src_iter:
+                xp, yp = rg["x_pages"], rg["y_pages"]
+                lv = self._decode_rg_levels(src, rg, stats)
+                rec_vcounts_rg = lv.record_value_counts()
 
-            plans: list = []            # x,y plan per page, stream order
-            pairs: list[tuple[int, int]] = []   # local record range per pair
-            vc_parts: list[np.ndarray] = []
-            local_base = 0
-            for p0, p1 in runs:
-                j0, j1 = base + p0, base + p1 - 1
-                r0 = int(idx.rec_start[j0])
-                r1 = int(idx.rec_start[j1] + idx.rec_count[j1])
-                stats.records_scanned += r1 - r0
-                for p in range(p0, p1):
-                    j = base + p
-                    plans.append(page_stream_plan(
-                        src.blob(int(idx.x_offset[j]), int(idx.x_nbytes[j])),
-                        PageMeta.from_dict(xp[p]), dtype, self.codec))
-                    plans.append(page_stream_plan(
-                        src.blob(int(idx.y_offset[j]), int(idx.y_nbytes[j])),
-                        PageMeta.from_dict(yp[p]), dtype, self.codec))
-                    lo_loc = local_base + int(idx.rec_start[j]) - r0
-                    pairs.append((lo_loc, lo_loc + int(idx.rec_count[j])))
-                stats.bytes_read += int(
-                    idx.x_nbytes[j0 : j1 + 1].sum() + idx.y_nbytes[j0 : j1 + 1].sum()
-                )
-                vc_parts.append(rec_vcounts_rg[r0:r1])
-                local_base += r1 - r0
-                lv.append_run(level_parts, r0, r1)
-                self._decode_run_extras(src, extra_pages, extra_all, we,
-                                        p0, p1, stats)
-                we += r1 - r0
-            rec_vcounts = (np.concatenate(vc_parts) if vc_parts
-                           else np.zeros(0, np.int64))
+                plans: list = []            # x,y plan per page, stream order
+                pairs: list[tuple[int, int]] = []   # local record range per pair
+                vc_parts: list[np.ndarray] = []
+                local_base = 0
+                for p0, p1 in runs:
+                    j0, j1 = base + p0, base + p1 - 1
+                    r0 = int(idx.rec_start[j0])
+                    r1 = int(idx.rec_start[j1] + idx.rec_count[j1])
+                    stats.records_scanned += r1 - r0
+                    for p in range(p0, p1):
+                        j = base + p
+                        meta_x = PageMeta.from_dict(xp[p])
+                        meta_y = PageMeta.from_dict(yp[p])
+                        # checksums gate the launch chain: a corrupt page is
+                        # caught here, before any plan or Pallas kernel sees it
+                        blob_x = self._checked_blob(
+                            src, int(idx.x_offset[j]), int(idx.x_nbytes[j]),
+                            meta_x.crc, stats, f"x page {p} of row group {rg_i}")
+                        blob_y = self._checked_blob(
+                            src, int(idx.y_offset[j]), int(idx.y_nbytes[j]),
+                            meta_y.crc, stats, f"y page {p} of row group {rg_i}")
+                        plans.append(page_stream_plan(
+                            blob_x, meta_x, dtype, self.codec))
+                        plans.append(page_stream_plan(
+                            blob_y, meta_y, dtype, self.codec))
+                        lo_loc = local_base + int(idx.rec_start[j]) - r0
+                        pairs.append((lo_loc, lo_loc + int(idx.rec_count[j])))
+                    stats.bytes_read += int(
+                        idx.x_nbytes[j0 : j1 + 1].sum() + idx.y_nbytes[j0 : j1 + 1].sum()
+                    )
+                    vc_parts.append(rec_vcounts_rg[r0:r1])
+                    local_base += r1 - r0
+                    lv.append_run(level_parts, r0, r1)
+                    self._decode_run_extras(src, extra_pages, extra_all, we,
+                                            p0, p1, stats)
+                    we += r1 - r0
+                rec_vcounts = (np.concatenate(vc_parts) if vc_parts
+                               else np.zeros(0, np.int64))
 
-            # chunk page pairs into VMEM-sized fused launches
-            for kind, cplans, cpairs, (rl, rh) in chunk_plan_pairs(plans, pairs):
-                vc = rec_vcounts[rl:rh]
-                if kind == "host":
-                    # a single page too large for any launch: decode this
-                    # pair on the host (same bits via fp_delta_execute)
-                    x_v = fp_delta_execute(cplans[0])
-                    y_v = fp_delta_execute(cplans[1])
-                    keep_c = (_bbox_keep_mask(x_v, y_v, vc, bbox)
-                              if do_refine else np.ones(len(vc), bool))
-                    starts = np.cumsum(vc) - vc
-                    iv = ragged_ranges(starts[keep_c], vc[keep_c])
-                    xs, ys = x_v[iv], y_v[iv]
-                    if keep_on_device:
-                        xs = DeviceCoords.from_numpy(xs)
-                        ys = DeviceCoords.from_numpy(ys)
+                # chunk page pairs into VMEM-sized fused launches
+                for kind, cplans, cpairs, (rl, rh) in chunk_plan_pairs(plans, pairs):
+                    vc = rec_vcounts[rl:rh]
+                    if kind == "host":
+                        # a single page too large for any launch: decode this
+                        # pair on the host (same bits via fp_delta_execute)
+                        x_v = fp_delta_execute(cplans[0])
+                        y_v = fp_delta_execute(cplans[1])
+                        keep_c = (_bbox_keep_mask(x_v, y_v, vc, bbox)
+                                  if do_refine else np.ones(len(vc), bool))
+                        starts = np.cumsum(vc) - vc
+                        iv = ragged_ranges(starts[keep_c], vc[keep_c])
+                        xs, ys = x_v[iv], y_v[iv]
+                        if keep_on_device:
+                            xs = DeviceCoords.from_numpy(xs)
+                            ys = DeviceCoords.from_numpy(ys)
+                        keep_parts.append(keep_c)
+                        x_parts.append(xs)
+                        y_parts.append(ys)
+                        continue
+                    stream = build_page_stream(cplans)
+                    aux = build_refine_aux(
+                        stream, [(a - rl, b - rl) for a, b in cpairs], vc)
+                    if do_refine:
+                        res = decode_refine_stream(stream, aux, bbox)
+                        keep_c, lo_d, hi_d = res.keep, res.lo, res.hi
+                    else:
+                        lo_d, hi_d = decode_stream_device(stream)
+                        keep_c = np.ones(len(vc), bool)
                     keep_parts.append(keep_c)
-                    x_parts.append(xs)
-                    y_parts.append(ys)
-                    continue
-                stream = build_page_stream(cplans)
-                aux = build_refine_aux(
-                    stream, [(a - rl, b - rl) for a, b in cpairs], vc)
-                if do_refine:
-                    res = decode_refine_stream(stream, aux, bbox)
-                    keep_c, lo_d, hi_d = res.keep, res.lo, res.hi
-                else:
-                    lo_d, hi_d = decode_stream_device(stream)
-                    keep_c = np.ones(len(vc), bool)
-                keep_parts.append(keep_c)
-                ix = ragged_ranges(aux.x_start[keep_c], aux.counts[keep_c])
-                iy = ragged_ranges(aux.y_start[keep_c], aux.counts[keep_c])
-                x_parts.append(gather_stream_values(
-                    lo_d, hi_d, ix, width, dtype, keep_on_device=keep_on_device))
-                y_parts.append(gather_stream_values(
-                    lo_d, hi_d, iy, width, dtype, keep_on_device=keep_on_device))
+                    ix = ragged_ranges(aux.x_start[keep_c], aux.counts[keep_c])
+                    iy = ragged_ranges(aux.y_start[keep_c], aux.counts[keep_c])
+                    x_parts.append(gather_stream_values(
+                        lo_d, hi_d, ix, width, dtype, keep_on_device=keep_on_device))
+                    y_parts.append(gather_stream_values(
+                        lo_d, hi_d, iy, width, dtype, keep_on_device=keep_on_device))
+        finally:
+            src_iter.close()
 
         keep_all = (np.concatenate(keep_parts) if keep_parts
                     else np.zeros(0, bool))

@@ -13,6 +13,18 @@ Row groups hold up to ``row_group_records`` records (paper: ~1M sort groups;
 whenever we have that number of records, we sort them and write them").
 Coordinate columns are split into record-aligned ~``page_values``-value pages,
 each carrying [min,max] statistics — the light-weight spatial index (§4).
+
+Format v2 (checksums, the default) differs only in integrity metadata: the
+magic becomes ``SPQF2\\0``, every stored blob's footer entry gains a ``crc``
+of its stored (post-compression) bytes, the footer records which
+``checksum_algo`` produced them, and the footer blob itself is followed by a
+4-byte CRC32C (``footer_nbytes`` counts blob + CRC)::
+
+    [footer (msgpack)] [footer_crc32c: uint32 LE]
+    [footer_nbytes: uint32 LE] [magic "SPQF2\\0"]
+
+``checksums=False`` writes the v1 layout byte-for-byte (no ``crc`` keys, v1
+magic); v1 files stay readable forever, just unverified.
 """
 
 from __future__ import annotations
@@ -23,13 +35,18 @@ from dataclasses import dataclass
 import msgpack
 import numpy as np
 
+from repro.io.checksum import checksum_fn, crc32c, default_algo
+
 from .columnar import DeviceCoords, GeometryColumns, from_ragged, shred
 from .pages import PageMeta, compress, encode_pages, plan_page_splits
 from .rle import encode_levels, rle_encode
 from .sfc import sort_keys
 
 MAGIC = b"SPQF1\x00"
-FORMAT_VERSION = 1
+MAGIC_V2 = b"SPQF2\x00"
+FORMAT_VERSION = 1       # pre-checksum layout (still written by checksums=False)
+FORMAT_VERSION_V2 = 2    # per-blob + footer checksums
+assert len(MAGIC) == len(MAGIC_V2)
 
 
 # --------------------------------------------------------------------- ragged
@@ -133,6 +150,8 @@ class SpatialParquetWriter:
         sort: str | None = None,  # None | 'z' | 'hilbert'
         sfc_order: int = 16,
         extra_schema: dict[str, str] | None = None,  # name -> numpy dtype str
+        checksums: bool = True,
+        checksum_algo: str | None = None,  # None -> fastest available
     ):
         self.path = str(path)
         self.encoding = encoding
@@ -142,8 +161,14 @@ class SpatialParquetWriter:
         self.sort = sort
         self.sfc_order = int(sfc_order)
         self.extra_schema = dict(extra_schema or {})
+        self.checksums = bool(checksums)
+        self.checksum_algo = (
+            (checksum_algo or default_algo()) if self.checksums else None
+        )
+        # resolve the algo now so an unknown name fails before any bytes land
+        self._crc = checksum_fn(self.checksum_algo) if self.checksums else None
         self._fh = open(self.path, "wb")
-        self._fh.write(MAGIC)
+        self._fh.write(MAGIC_V2 if self.checksums else MAGIC)
         self._offset = len(MAGIC)
         self._pending = _PendingGroup([], {k: [] for k in self.extra_schema})
         self._row_groups: list[dict] = []
@@ -179,7 +204,7 @@ class SpatialParquetWriter:
         if self._pending.n_records:
             self._flush_group(self._pending.n_records)
         footer = {
-            "version": FORMAT_VERSION,
+            "version": FORMAT_VERSION_V2 if self.checksums else FORMAT_VERSION,
             "coord_dtype": self._coord_dtype or "<f8",
             "encoding": self.encoding,
             "codec": self.codec,
@@ -188,10 +213,16 @@ class SpatialParquetWriter:
             "extra_schema": self.extra_schema,
             "row_groups": self._row_groups,
         }
+        if self.checksums:
+            footer["checksum_algo"] = self.checksum_algo
         blob = msgpack.packb(footer, use_bin_type=True)
+        if self.checksums:
+            # the footer checksum is always CRC32C (the algo tag lives inside
+            # the footer, so it cannot govern its own verification)
+            blob += struct.pack("<I", crc32c(blob))
         self._fh.write(blob)
         self._fh.write(struct.pack("<I", len(blob)))
-        self._fh.write(MAGIC)
+        self._fh.write(MAGIC_V2 if self.checksums else MAGIC)
         self._fh.close()
         self._footer = footer
         self._closed = True
@@ -234,11 +265,12 @@ class SpatialParquetWriter:
             extras = {k: v[perm] for k, v in extras.items()}
         self._write_row_group(cols, extras)
 
-    def _write_blob(self, buf: bytes) -> tuple[int, int]:
+    def _write_blob(self, buf: bytes) -> tuple[int, int, int | None]:
         off = self._offset
         self._fh.write(buf)
         self._offset += len(buf)
-        return off, len(buf)
+        crc = self._crc(buf) if self._crc is not None else None
+        return off, len(buf), crc
 
     def _write_row_group(self, cols: GeometryColumns, extras: dict) -> None:
         rg: dict = {"n_records": cols.n_records, "n_values": cols.n_values}
@@ -250,8 +282,10 @@ class SpatialParquetWriter:
             ("defn", encode_levels(cols.defn)),
         ):
             comp = compress(buf, self.codec)
-            off, nb = self._write_blob(comp)
+            off, nb, crc = self._write_blob(comp)
             rg[name] = {"offset": off, "nbytes": nb, "raw_nbytes": len(buf)}
+            if crc is not None:
+                rg[name]["crc"] = crc
         # coordinate pages (x and y share record-aligned boundaries => bbox/page)
         # batch-encoded: one delta/zigzag/bit-count pass per axis feeds every
         # page's n* optimizer and token emitter (see fp_delta_encode_pages)
@@ -264,7 +298,7 @@ class SpatialParquetWriter:
             encoded = encode_pages(values, vbounds, self.encoding, self.codec)
             for (buf, st), (r0, r1), (v0, v1) in zip(encoded, splits, vbounds):
                 chunk = values[v0:v1]
-                off, nb = self._write_blob(buf)
+                off, nb, crc = self._write_blob(buf)
                 pages.append(
                     PageMeta(
                         offset=off, nbytes=nb, count=v1 - v0,
@@ -273,6 +307,7 @@ class SpatialParquetWriter:
                         vmax=float(chunk.max()) if len(chunk) else float("-inf"),
                         encoding=self.encoding,
                         n_bits=st["n_bits"], n_resets=st["n_resets"],
+                        crc=crc,
                     ).to_dict()
                 )
             rg[f"{axis}_pages"] = pages
@@ -284,7 +319,7 @@ class SpatialParquetWriter:
             encoded = encode_pages(v, [(r0, r1) for r0, r1 in splits], enc, self.codec)
             for (buf, st), (r0, r1) in zip(encoded, splits):
                 chunk = v[r0:r1]
-                off, nb = self._write_blob(buf)
+                off, nb, crc = self._write_blob(buf)
                 pages.append(
                     PageMeta(
                         offset=off, nbytes=nb, count=r1 - r0,
@@ -292,6 +327,7 @@ class SpatialParquetWriter:
                         vmin=float(chunk.min()) if len(chunk) else float("inf"),
                         vmax=float(chunk.max()) if len(chunk) else float("-inf"),
                         encoding=enc, n_bits=st["n_bits"], n_resets=st["n_resets"],
+                        crc=crc,
                     ).to_dict()
                 )
             rg["extra"][k] = pages

@@ -16,6 +16,7 @@ lifts the same idea to a *lake* of many files::
     # stats.shards_read / stats.shards_total, stats.bytes_read / bytes_total
 """
 
+from .errors import DatasetError, ShardFailure, ShardReadError
 from .index import DatasetIndex
 from .manifest import (
     DATASET_FORMAT,
@@ -25,7 +26,7 @@ from .manifest import (
     is_dataset,
     shard_path,
 )
-from .scanner import SpatialDatasetScanner
+from .scanner import ON_ERROR_POLICIES, SpatialDatasetScanner
 from .writer import SpatialDatasetWriter, write_dataset
 
 __all__ = [
@@ -36,6 +37,10 @@ __all__ = [
     "is_dataset",
     "shard_path",
     "DatasetIndex",
+    "DatasetError",
+    "ShardFailure",
+    "ShardReadError",
+    "ON_ERROR_POLICIES",
     "SpatialDatasetScanner",
     "SpatialDatasetWriter",
     "write_dataset",

@@ -20,6 +20,8 @@ import json
 import os
 from dataclasses import dataclass, field
 
+from .errors import DatasetError
+
 MANIFEST_NAME = "manifest.json"
 DATASET_FORMAT = "spatial-parquet-dataset"
 MANIFEST_VERSION = 1
@@ -59,6 +61,28 @@ class ShardInfo:
             data_bytes=d["data_bytes"],
             file_bytes=d["file_bytes"],
         )
+
+    def validate(self, index: int, where: str) -> None:
+        """Structural checks beyond mere key presence (see ``load``)."""
+        who = f"{where}: shards[{index}]"
+        if not isinstance(self.path, str) or not self.path:
+            raise DatasetError(f"{who}: 'path' must be a non-empty string")
+        p = self.path.replace("\\", "/")
+        if p.startswith("/") or p.startswith("~") or ".." in p.split("/"):
+            # shard paths are catalog-relative by contract; an absolute or
+            # parent-escaping path would let a manifest read arbitrary files
+            raise DatasetError(
+                f"{who}: path {self.path!r} escapes the dataset root")
+        if len(self.mbr) != 4 or not all(
+                isinstance(v, (int, float)) for v in self.mbr):
+            raise DatasetError(f"{who}: 'mbr' must be 4 numbers, got "
+                               f"{self.mbr!r}")
+        for k in ("n_records", "n_values", "n_pages", "data_bytes",
+                  "file_bytes"):
+            v = getattr(self, k)
+            if not isinstance(v, int) or isinstance(v, bool) or v < 0:
+                raise DatasetError(
+                    f"{who}: {k!r} must be a non-negative integer, got {v!r}")
 
 
 @dataclass
@@ -119,25 +143,90 @@ class DatasetManifest:
 
     @classmethod
     def load(cls, root) -> "DatasetManifest":
-        """Load from a dataset directory (or a manifest.json path directly)."""
+        """Load and validate from a dataset directory (or a manifest.json
+        path directly).
+
+        Any way the catalog can be wrong — missing file, truncated or
+        invalid JSON (a partially-written manifest), wrong ``format`` tag,
+        too-new version, missing keys, malformed shard entries — raises an
+        attributed :class:`~repro.dataset.errors.DatasetError` naming the
+        path and the offending field, never a raw ``KeyError`` /
+        ``JSONDecodeError`` / ``TypeError``.
+        """
         path = str(root)
         if os.path.isdir(path):
             path = os.path.join(path, MANIFEST_NAME)
-        with open(path) as fh:
-            d = json.load(fh)
+        try:
+            with open(path) as fh:
+                d = json.load(fh)
+        except FileNotFoundError:
+            raise DatasetError(
+                f"{path}: no manifest found (not a dataset directory?)"
+            ) from None
+        except json.JSONDecodeError as exc:
+            raise DatasetError(
+                f"{path}: manifest is not valid JSON "
+                f"(truncated or partially written?): {exc}") from exc
+        except OSError as exc:
+            raise DatasetError(f"{path}: cannot read manifest: {exc}") from exc
+        if not isinstance(d, dict):
+            raise DatasetError(
+                f"{path}: manifest must be a JSON object, got "
+                f"{type(d).__name__}")
         if d.get("format") != DATASET_FORMAT:
-            raise ValueError(f"{path}: not a {DATASET_FORMAT} manifest")
-        if d.get("version", 0) > MANIFEST_VERSION:
-            raise ValueError(f"{path}: manifest version {d['version']} too new")
-        return cls(
+            raise DatasetError(
+                f"{path}: not a {DATASET_FORMAT} manifest "
+                f"(format={d.get('format')!r})")
+        version = d.get("version", 0)
+        if not isinstance(version, int) or version < 1:
+            raise DatasetError(f"{path}: bad manifest version {version!r}")
+        if version > MANIFEST_VERSION:
+            raise DatasetError(
+                f"{path}: manifest version {version} is newer than this "
+                f"library understands (<= {MANIFEST_VERSION})")
+        for key in ("coord_dtype", "codec", "encoding", "shards"):
+            if key not in d:
+                raise DatasetError(f"{path}: manifest missing key {key!r}")
+        if not isinstance(d["shards"], list):
+            raise DatasetError(f"{path}: 'shards' must be a list, got "
+                               f"{type(d['shards']).__name__}")
+        shards = []
+        for i, s in enumerate(d["shards"]):
+            if not isinstance(s, dict):
+                raise DatasetError(
+                    f"{path}: shards[{i}] must be an object, got "
+                    f"{type(s).__name__}")
+            try:
+                info = ShardInfo.from_dict(s)
+            except KeyError as exc:
+                raise DatasetError(
+                    f"{path}: shards[{i}] missing key {exc.args[0]!r}"
+                ) from None
+            except (TypeError, ValueError) as exc:
+                raise DatasetError(
+                    f"{path}: shards[{i}] malformed: {exc}") from exc
+            info.validate(i, path)
+            shards.append(info)
+        extra_schema = d.get("extra_schema", {})
+        if not isinstance(extra_schema, dict):
+            raise DatasetError(f"{path}: 'extra_schema' must be an object")
+        manifest = cls(
             coord_dtype=d["coord_dtype"],
             codec=d["codec"],
             encoding=d["encoding"],
-            sort=d["sort"],
-            extra_schema=dict(d.get("extra_schema", {})),
-            shards=[ShardInfo.from_dict(s) for s in d["shards"]],
-            version=d.get("version", MANIFEST_VERSION),
+            sort=d.get("sort"),
+            extra_schema=dict(extra_schema),
+            shards=shards,
+            version=version,
         )
+        for key, actual in (("n_shards", manifest.n_shards),
+                            ("n_records", manifest.n_records)):
+            declared = d.get(key)
+            if declared is not None and declared != actual:
+                raise DatasetError(
+                    f"{path}: declared {key}={declared} but shard entries "
+                    f"give {actual} (partial write?)")
+        return manifest
 
 
 def is_dataset(path) -> bool:

@@ -39,36 +39,94 @@ from repro.core.geometry import Geometry
 from repro.core.reader import ReadStats, SpatialParquetReader
 from repro.core.writer import concat_columns
 
+from .errors import ShardFailure, ShardReadError
 from .index import DatasetIndex
 from .manifest import DatasetManifest, shard_path
 
+ON_ERROR_POLICIES = ("raise", "retry", "skip")
+
 
 class SpatialDatasetScanner:
-    """Query interface over a sharded Spatial Parquet dataset."""
+    """Query interface over a sharded Spatial Parquet dataset.
+
+    ``on_error`` sets the degraded-mode policy for shards whose reads fail
+    even after the byte source's own retry/backoff: ``"raise"`` (default)
+    wraps the cause in an attributed :class:`ShardReadError`; ``"retry"``
+    re-opens the failing shard from scratch up to ``shard_retries`` more
+    times (a fresh reader + source per attempt, so poisoned state cannot
+    carry over) and raises only when those are exhausted; ``"skip"`` does
+    the same retries but then drops the shard, recording a
+    :class:`ShardFailure` in ``stats.failures`` — the scan returns every
+    healthy shard's records, bit-identical to a clean scan minus the skipped
+    shards.
+
+    ``source_factory``, if given, maps a shard's absolute path to a
+    :class:`~repro.io.source.ByteRangeSource` — the hook that points a scan
+    at remote storage (e.g. ``lambda p: RemoteRangeSource(server_for(p))``)
+    without the scanner knowing anything about transports.
+    """
 
     def __init__(self, root, *, max_workers: int = 4,
-                 coalesce_max_gap: int = 1 << 16, prefetch_row_groups: int = 1):
+                 coalesce_max_gap: int = 1 << 16, prefetch_row_groups: int = 1,
+                 on_error: str = "raise", shard_retries: int = 1,
+                 source_factory=None, verify_checksums: bool = True):
         self.root = str(root)
         self.manifest = DatasetManifest.load(root)
         self.index = DatasetIndex(self.manifest)
         self.max_workers = max(1, int(max_workers))
         self.coalesce_max_gap = int(coalesce_max_gap)
         self.prefetch_row_groups = int(prefetch_row_groups)
+        if on_error not in ON_ERROR_POLICIES:
+            raise ValueError(
+                f"on_error must be one of {ON_ERROR_POLICIES}, got {on_error!r}")
+        self.on_error = on_error
+        self.shard_retries = max(0, int(shard_retries))
+        self.source_factory = source_factory
+        self.verify_checksums = bool(verify_checksums)
         self.extra_schema = dict(self.manifest.extra_schema)
         self.n_records = self.manifest.n_records
 
     # ------------------------------------------------------------- internals
-    def _read_shard(self, shard_i: int, bbox, columns, refine, coalesce,
-                    device, keep_on_device):
-        path = shard_path(self.root, self.manifest.shards[shard_i])
-        with SpatialParquetReader(
-            path, coalesce_max_gap=self.coalesce_max_gap,
-            prefetch_row_groups=self.prefetch_row_groups,
-        ) as r:
+    def _open_shard(self, path: str) -> SpatialParquetReader:
+        kwargs = dict(coalesce_max_gap=self.coalesce_max_gap,
+                      prefetch_row_groups=self.prefetch_row_groups,
+                      verify_checksums=self.verify_checksums)
+        if self.source_factory is not None:
+            return SpatialParquetReader(source=self.source_factory(path),
+                                        **kwargs)
+        return SpatialParquetReader(path, **kwargs)
+
+    def _read_shard_once(self, path: str, bbox, columns, refine, coalesce,
+                         device, keep_on_device):
+        with self._open_shard(path) as r:
             return r.read_columnar(
                 bbox=bbox, columns=columns, refine=refine, coalesce=coalesce,
                 device=device, keep_on_device=keep_on_device,
             )
+
+    def _read_shard(self, shard_i: int, bbox, columns, refine, coalesce,
+                    device, keep_on_device):
+        """Read one shard under the scanner's error policy.
+
+        Returns ``(result, extra_attempts, failure)`` where exactly one of
+        ``result`` / ``failure`` is set; raises only under ``on_error=
+        "raise"`` (immediately) or ``"retry"`` (after exhausting
+        ``shard_retries``), always as an attributed :class:`ShardReadError`.
+        """
+        path = shard_path(self.root, self.manifest.shards[shard_i])
+        retries = 0 if self.on_error == "raise" else self.shard_retries
+        last: Exception | None = None
+        for attempt in range(retries + 1):
+            try:
+                res = self._read_shard_once(path, bbox, columns, refine,
+                                            coalesce, device, keep_on_device)
+                return res, attempt, None
+            except Exception as exc:
+                last = exc
+        if self.on_error == "skip":
+            failure = ShardFailure.from_error(shard_i, path, last, retries + 1)
+            return None, retries, failure
+        raise ShardReadError(shard_i, path, last) from last
 
     # -------------------------------------------------------------- scan API
     def scan(
@@ -105,7 +163,7 @@ class SpatialDatasetScanner:
                 stats.bytes_total += shard.data_bytes
 
         if len(hit) == 0:
-            results = []
+            outcomes = []
         elif parallel and self.max_workers > 1 and len(hit) > 1:
             with ThreadPoolExecutor(max_workers=self.max_workers) as pool:
                 futures = [
@@ -114,13 +172,24 @@ class SpatialDatasetScanner:
                     for i in hit
                 ]
                 # gather in submission (manifest) order: deterministic output
-                results = [f.result() for f in futures]
+                outcomes = [f.result() for f in futures]
         else:
-            results = [
+            outcomes = [
                 self._read_shard(int(i), bbox, columns, refine, coalesce,
                                  device, keep_on_device)
                 for i in hit
             ]
+
+        # degraded-mode accounting: skipped shards leave the result but are
+        # attributed in stats.failures; extra per-shard attempts accumulate
+        results = []
+        for res, attempts, failure in outcomes:
+            stats.shard_retries += attempts
+            if failure is not None:
+                stats.failures.append(failure)
+                stats.shards_read -= 1  # it never contributed bytes/records
+            else:
+                results.append(res)
 
         geos = [g for g, _, _ in results if g is not None]
         # concat_columns merges DeviceCoords shards on the accelerator

@@ -90,8 +90,8 @@ def test_full_scan_is_one_read_per_row_group(rng):
     with SpatialParquetReader(p) as r:
         n_groups = len(r.footer["row_groups"])
         assert n_groups == 4
-        counter = CountingFile(r._fh)
-        r._fh = counter
+        counter = CountingFile(r._source._fh)
+        r._source._fh = counter
         geo, extras, _ = r.read_columnar()
         assert geo.n_records == 20_000
         # every row group's blobs are adjacent -> exactly one coalesced read
@@ -106,8 +106,8 @@ def test_pruned_read_syscalls_bounded_by_runs(rng):
     with SpatialParquetReader(p) as r:
         runs = r.index.page_runs(bbox)
         assert len(runs) >= 1
-        counter = CountingFile(r._fh)
-        r._fh = counter
+        counter = CountingFile(r._source._fh)
+        r._source._fh = counter
         geo, extras, st = r.read_columnar(bbox=bbox)
         assert st.pages_read < st.pages_total, "index should prune pages"
         # one range for the levels + at most 3 per run (x, y, extras merge
@@ -188,18 +188,41 @@ def test_index_entries_view_matches_arrays(rng):
 
 
 def test_format_magic_and_footer_unchanged(rng):
-    from repro.core.writer import MAGIC
+    """v1 layout (checksums=False) is byte-compatible with the pre-checksum
+    format; default writes are v2 (new magic, per-blob CRCs, footer CRC)."""
+    from repro.core.writer import MAGIC, MAGIC_V2
     import struct
 
+    # v1: explicit checksums=False keeps the original trailer exactly
     p = tempfile.mktemp(".spqf")
-    _write_sample(p, rng)
+    _write_sample(p, rng, checksums=False)
     blob = open(p, "rb").read()
     assert blob.startswith(MAGIC) and blob.endswith(MAGIC)
     (flen,) = struct.unpack("<I", blob[-(len(MAGIC) + 4):-len(MAGIC)])
     assert flen < len(blob)
     with SpatialParquetReader(p) as r:
         assert r.footer["version"] == 1
+        assert "checksum_algo" not in r.footer
+        assert "crc" not in r.footer["row_groups"][0]["x_pages"][0]
         assert set(r.footer["row_groups"][0]) >= {
+            "type", "type_rep", "rep", "defn", "x_pages", "y_pages", "extra",
+        }
+    os.unlink(p)
+
+    # v2 (default): same trailer shape under the new magic, CRCs everywhere
+    p = tempfile.mktemp(".spqf")
+    _write_sample(p, rng)
+    blob = open(p, "rb").read()
+    assert blob.startswith(MAGIC_V2) and blob.endswith(MAGIC_V2)
+    (flen,) = struct.unpack("<I", blob[-(len(MAGIC_V2) + 4):-len(MAGIC_V2)])
+    assert flen < len(blob)
+    with SpatialParquetReader(p) as r:
+        assert r.footer["version"] == 2
+        assert r.footer["checksum_algo"] in ("crc32c", "crc32")
+        rg = r.footer["row_groups"][0]
+        assert isinstance(rg["x_pages"][0]["crc"], int)
+        assert isinstance(rg["type"]["crc"], int)
+        assert set(rg) >= {
             "type", "type_rep", "rep", "defn", "x_pages", "y_pages", "extra",
         }
     os.unlink(p)
