@@ -21,7 +21,13 @@ pruning ratio ``dataset_bbox_bytes_read``/``dataset_bytes_total``, plus the
 fault-tolerant remote path: ``remote_scan_s`` (full read through a
 ``RemoteRangeSource`` over an in-process range-GET server, ``cold_cache``
 vs ``warm_cache`` block cache). Timings are best-of-N to shrink scheduler
-noise.
+noise; ``latency_percentiles`` additionally reports the p50/p99 of every
+repeated timing (the serve-tier view: tails, not just the floor).
+
+``--trace scan_trace.json`` re-runs the fused device dataset scan with
+:mod:`repro.obs` tracing enabled, verifies the traced results are
+bit-identical to the untraced ones (exit code 1 otherwise), and writes the
+Chrome trace-event JSON (with the metrics snapshot embedded) for Perfetto.
 """
 
 from __future__ import annotations
@@ -61,28 +67,31 @@ def selectivity_bbox(geo, frac: float):
 
 
 def run(scale: float = 0.25, dataset: str = "PT", repeats: int = 3,
-        n_shards: int = 4) -> dict:
+        n_shards: int = 4, trace: str | None = None) -> dict:
     cols = make_dataset(dataset, scale, sort="hilbert")
     path = tmppath(".spqf")
     droot = tempfile.mkdtemp(prefix="smoke_ds_")
+    # p50/p99 of every repeated timing, keyed like the min-based fields
+    pcts: dict[str, dict] = {}
+
+    def bench(name: str, fn) -> float:
+        samples = [_timed(fn) for _ in range(repeats)]
+        pcts[name] = _percentiles(samples)
+        return min(samples)
+
     try:
-        write_s = min(
-            _timed(lambda: write_file(path, columns=cols, sort=None, codec="none"))
-            for _ in range(repeats)
-        )
+        write_s = bench(
+            "write_s",
+            lambda: write_file(path, columns=cols, sort=None, codec="none"))
         file_bytes = os.path.getsize(path)
         with SpatialParquetReader(path) as r:
-            read_s = min(
-                _timed(lambda: r.read_columnar()) for _ in range(repeats)
-            )
-            read_legacy_s = min(
-                _timed(lambda: r.read_columnar(coalesce=False)) for _ in range(repeats)
-            )
+            read_s = bench("read_columnar_s", lambda: r.read_columnar())
+            read_legacy_s = bench(
+                "read_columnar_legacy_s",
+                lambda: r.read_columnar(coalesce=False))
             r.read_columnar(device="jax")  # warm-up: jit compile off the clock
-            device_decode_s = min(
-                _timed(lambda: r.read_columnar(device="jax"))
-                for _ in range(repeats)
-            )
+            device_decode_s = bench(
+                "device_decode_s", lambda: r.read_columnar(device="jax"))
             geo, _, stats = r.read_columnar()
 
             # fused decode→refine selectivity sweep (host vs device)
@@ -92,23 +101,28 @@ def run(scale: float = 0.25, dataset: str = "PT", repeats: int = 3,
                 # warm-up compiles this bucket off the clock
                 _, _, dstats_r = r.read_columnar(
                     bbox=bbox, refine=True, device="jax")
-                host_s = min(
+                host = [
                     _timed(lambda: r.read_columnar(bbox=bbox, refine=True))
                     for _ in range(repeats)
-                )
-                dev_s = min(
+                ]
+                dev = [
                     _timed(lambda: r.read_columnar(
                         bbox=bbox, refine=True, device="jax"))
                     for _ in range(repeats)
-                )
-                refine_sweep.append({
+                ]
+                row = {
                     "target": target,
                     "selectivity": round(
                         dstats_r.records_returned / max(geo.n_records, 1), 4),
-                    "host_refine_s": round(host_s, 6),
-                    "device_refine_s": round(dev_s, 6),
+                    "host_refine_s": round(min(host), 6),
+                    "device_refine_s": round(min(dev), 6),
                     "records": dstats_r.records_returned,
-                })
+                }
+                row.update({f"host_refine_{k}": v
+                            for k, v in _percentiles(host).items()})
+                row.update({f"device_refine_{k}": v
+                            for k, v in _percentiles(dev).items()})
+                refine_sweep.append(row)
             device_refine_s = refine_sweep[-1]["device_refine_s"]
 
         # remote (object-store-style) scan through the fault-tolerant
@@ -119,30 +133,26 @@ def run(scale: float = 0.25, dataset: str = "PT", repeats: int = 3,
             with SpatialParquetReader(source=RemoteRangeSource(server)) as rr:
                 rr.read_columnar()
 
-        remote_scan_cold_s = min(
-            _timed(remote_scan_cold) for _ in range(repeats)
-        )
+        remote_scan_cold_s = bench("remote_scan_cold_s", remote_scan_cold)
         with SpatialParquetReader(source=RemoteRangeSource(server)) as rr:
             rr.read_columnar()  # populate the block cache off the clock
-            remote_scan_warm_s = min(
-                _timed(lambda: rr.read_columnar()) for _ in range(repeats)
-            )
+            remote_scan_warm_s = bench(
+                "remote_scan_warm_s", lambda: rr.read_columnar())
 
         # sharded dataset: async full scan + shard-pruned bbox scan
-        dataset_write_s = min(
-            _timed(lambda: write_dataset(
-                droot, columns=cols, n_shards=n_shards, sort="hilbert",
-                codec="none"))
-            for _ in range(repeats)
-        )
+        dataset_write_s = bench(
+            "dataset_write_s",
+            lambda: write_dataset(droot, columns=cols, n_shards=n_shards,
+                                  sort="hilbert", codec="none"))
         sc = SpatialDatasetScanner(droot, max_workers=n_shards)
-        dataset_scan_s = min(_timed(lambda: sc.scan()) for _ in range(repeats))
+        dataset_scan_s = bench("dataset_scan_s", lambda: sc.scan())
         x0, y0, x1, y1 = sc.manifest.mbr
         bbox = (x0, y0, x0 + (x1 - x0) / 4, y0 + (y1 - y0) / 4)
-        dataset_scan_bbox_s = min(
-            _timed(lambda: sc.scan(bbox=bbox)) for _ in range(repeats)
-        )
+        dataset_scan_bbox_s = bench(
+            "dataset_scan_bbox_s", lambda: sc.scan(bbox=bbox))
         _, _, dstats = sc.scan(bbox=bbox)
+        trace_info = (_traced_scan_check(sc, bbox, trace)
+                      if trace is not None else None)
     finally:
         if os.path.exists(path):
             os.unlink(path)
@@ -173,6 +183,8 @@ def run(scale: float = 0.25, dataset: str = "PT", repeats: int = 3,
         },
         "n_records": int(geo.n_records),
         "n_values": int(geo.n_values),
+        "latency_percentiles": pcts,
+        "trace": trace_info,
         "python": platform.python_version(),
         "machine": platform.machine(),
     }
@@ -184,6 +196,50 @@ def _timed(fn) -> float:
     return time.perf_counter() - t0
 
 
+def _percentiles(samples) -> dict:
+    return {"p50": round(float(np.percentile(samples, 50)), 6),
+            "p99": round(float(np.percentile(samples, 99)), 6)}
+
+
+def _result_fingerprint(geo, extras) -> bytes:
+    parts = []
+    if geo is not None:
+        geo = geo.coords_to_host()
+        for f in ("types", "type_rep", "rep", "defn", "x", "y"):
+            parts.append(np.asarray(getattr(geo, f)).tobytes())
+    for k in sorted(extras):
+        parts.append(k.encode())
+        parts.append(np.asarray(extras[k]).tobytes())
+    return b"".join(parts)
+
+
+def _traced_scan_check(sc, bbox, trace_path: str) -> dict:
+    """Traced fused device scan, verified bit-identical to the untraced one.
+
+    Exports the Chrome trace JSON (metrics snapshot embedded) to
+    ``trace_path``; exits non-zero if tracing perturbed the results.
+    """
+    from repro import obs
+
+    ref = sc.scan(bbox=bbox, refine=True, device="jax")
+    tracer = obs.enable()
+    try:
+        out = sc.scan(bbox=bbox, refine=True, device="jax")
+    finally:
+        obs.disable()
+    if _result_fingerprint(ref[0], ref[1]) != _result_fingerprint(out[0], out[1]):
+        raise SystemExit(
+            "[smoke] traced scan results differ from untraced scan")
+    tracer.export(trace_path, metrics=obs.snapshot())
+    spans = [e for e in tracer.events if e["ph"] == "X"]
+    return {
+        "path": trace_path,
+        "spans": len(spans),
+        "stages": sorted({e["name"] for e in spans}),
+        "bit_identical": True,
+    }
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--scale", type=float, default=0.25)
@@ -191,9 +247,13 @@ def main() -> None:
     ap.add_argument("--out", default="BENCH_read.json")
     ap.add_argument("--repeats", type=int, default=3)
     ap.add_argument("--shards", type=int, default=4)
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="run a traced fused device scan, verify it is "
+                         "bit-identical to the untraced one, and write the "
+                         "Chrome trace-event JSON here")
     args = ap.parse_args()
     result = run(scale=args.scale, dataset=args.dataset, repeats=args.repeats,
-                 n_shards=args.shards)
+                 n_shards=args.shards, trace=args.trace)
     with open(args.out, "w") as fh:
         json.dump(result, fh, indent=1)
         fh.write("\n")

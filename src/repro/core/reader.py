@@ -88,6 +88,7 @@ All recoveries are counted in :class:`ReadStats` (``retries``, ``timeouts``,
 from __future__ import annotations
 
 import struct
+import time
 from bisect import bisect_right
 from collections import deque
 from dataclasses import dataclass, field
@@ -95,6 +96,7 @@ from dataclasses import dataclass, field
 import msgpack
 import numpy as np
 
+from repro import obs
 from repro.io.checksum import ChecksumError, checksum_fn, crc32c
 from repro.io.source import LocalFileSource
 
@@ -415,6 +417,7 @@ class SpatialParquetReader:
         if got == crc:
             return blob
         stats.checksum_failures += 1
+        obs.instant("checksum.refetch", cat="io", what=what, offset=offset)
         fresh = src.refetch(offset, nbytes)
         stats.retries += 1
         got = self._blob_crc(fresh)
@@ -460,6 +463,10 @@ class SpatialParquetReader:
 
     def _decode_rg_levels(self, src, rg, stats: ReadStats) -> _RowGroupLevels:
         """Decode one row group's four level streams from memory slices."""
+        with obs.span("rg.levels", cat="decode"):
+            return self._decode_rg_levels_inner(src, rg, stats)
+
+    def _decode_rg_levels_inner(self, src, rg, stats: ReadStats) -> _RowGroupLevels:
         types = rle_decode(
             decompress(self._level_blob(src, rg, "type", stats), self.codec))
         type_rep = decode_levels(
@@ -509,11 +516,19 @@ class SpatialParquetReader:
             for it in items:
                 yield it, _DirectRanges(self._source)
             return
+
+        def fetch(it):
+            # the "fetch" stage span: every readinto of one row group's
+            # coalesced ranges (runs on the prefetch thread when enabled —
+            # obs.submit hands the span context across)
+            with obs.span("rg.fetch", cat="io", rg=it[0]):
+                return _CoalescedRanges(self._source, it[-1],
+                                        self.coalesce_max_gap)
+
         lookahead = self.prefetch_row_groups
         if lookahead == 0 or len(items) <= 1:
             for it in items:
-                yield it, _CoalescedRanges(self._source, it[-1],
-                                           self.coalesce_max_gap)
+                yield it, fetch(it)
             return
         from concurrent.futures import ThreadPoolExecutor
 
@@ -521,16 +536,12 @@ class SpatialParquetReader:
             pending: deque = deque()
             nxt = 0
             while nxt < len(items) and len(pending) < lookahead:
-                pending.append(pool.submit(
-                    _CoalescedRanges, self._source, items[nxt][-1],
-                    self.coalesce_max_gap))
+                pending.append(obs.submit(pool, fetch, items[nxt]))
                 nxt += 1
             for it in items:
                 src = pending.popleft().result()
                 if nxt < len(items):
-                    pending.append(pool.submit(
-                        _CoalescedRanges, self._source, items[nxt][-1],
-                        self.coalesce_max_gap))
+                    pending.append(obs.submit(pool, fetch, items[nxt]))
                     nxt += 1
                 yield it, src
 
@@ -561,7 +572,42 @@ class SpatialParquetReader:
         accelerator; it is a no-op when ``columns`` excludes geometry (extra
         columns always decode on the host). ``"cpu"`` is the default and the
         oracle.
+
+        With telemetry on (``repro.obs.enable()``) the call is wrapped in a
+        ``scan.file`` span with per-row-group fetch/plan/decode/launch/
+        transfer child spans, and on return folds its ``ReadStats`` plus the
+        derived gauges (``scan.latency_s``, ``scan.host_cpu_s_per_gb``,
+        bytes-pruned-per-level) into the metrics registry. Disabled, the
+        path is allocation- and result-identical to the uninstrumented one.
         """
+        if not obs.enabled():
+            return self._read_columnar_impl(
+                bbox, columns, refine, coalesce, device,
+                keep_on_device=keep_on_device)
+        t0 = time.perf_counter()
+        c0 = time.process_time()
+        with obs.span("scan.file", path=self.path, device=device,
+                      refine=bool(refine)):
+            out = self._read_columnar_impl(
+                bbox, columns, refine, coalesce, device,
+                keep_on_device=keep_on_device)
+        wall = time.perf_counter() - t0
+        cpu = time.process_time() - c0
+        stats = out[2]
+        obs.observe("scan.latency_s", wall)
+        scanned_gb = stats.bytes_read / 1e9
+        if scanned_gb > 0:
+            # process-wide CPU per scanned GB: the GPU-layout-v2 ROADMAP
+            # metric (how much host planning/decode a scan still costs)
+            obs.gauge("scan.host_cpu_s_per_gb", cpu / scanned_gb)
+            obs.observe("scan.host_cpu_s_per_gb_hist", cpu / scanned_gb)
+        obs.count("pruned.page_bytes",
+                  max(0, stats.bytes_total - stats.bytes_read))
+        obs.fold_read_stats(stats)
+        return out
+
+    def _read_columnar_impl(self, bbox, columns, refine, coalesce, device,
+                            *, keep_on_device):
         if device not in ("cpu", "jax"):
             raise ValueError(f"device must be 'cpu' or 'jax', got {device!r}")
         use_device = device == "jax"
@@ -657,34 +703,38 @@ class SpatialParquetReader:
                         decode_page(blob, meta, self.coord_dtype, self.codec,
                                     out=dest[off : off + cnt])
 
-                for p0, p1 in runs:
-                    j0, j1 = base + p0, base + p1 - 1
-                    r0 = int(idx.rec_start[j0])
-                    r1 = int(idx.rec_start[j1] + idx.rec_count[j1])
-                    stats.records_scanned += r1 - r0
-                    if want_geom:
-                        for p in range(p0, p1):
-                            j = base + p
-                            cnt = int(idx.count[j])
-                            _coord_page("x", xp[p], j, p, x_all, w, cnt)
-                            _coord_page("y", yp[p], j, p, y_all, w, cnt)
-                            w += cnt
-                        stats.bytes_read += int(
-                            idx.x_nbytes[j0 : j1 + 1].sum()
-                            + idx.y_nbytes[j0 : j1 + 1].sum()
-                        )
-                        lv.append_run(level_parts, r0, r1)
-                    self._decode_run_extras(src, extra_pages, extra_all, we,
-                                            p0, p1, stats)
-                    we += r1 - r0
+                with obs.span("rg.decode", cat="decode", rg=rg_i,
+                              device=device):
+                    for p0, p1 in runs:
+                        j0, j1 = base + p0, base + p1 - 1
+                        r0 = int(idx.rec_start[j0])
+                        r1 = int(idx.rec_start[j1] + idx.rec_count[j1])
+                        stats.records_scanned += r1 - r0
+                        if want_geom:
+                            for p in range(p0, p1):
+                                j = base + p
+                                cnt = int(idx.count[j])
+                                _coord_page("x", xp[p], j, p, x_all, w, cnt)
+                                _coord_page("y", yp[p], j, p, y_all, w, cnt)
+                                w += cnt
+                            stats.bytes_read += int(
+                                idx.x_nbytes[j0 : j1 + 1].sum()
+                                + idx.y_nbytes[j0 : j1 + 1].sum()
+                            )
+                            lv.append_run(level_parts, r0, r1)
+                        self._decode_run_extras(src, extra_pages, extra_all,
+                                                we, p0, p1, stats)
+                        we += r1 - r0
 
                 if deferred:
                     # one batched page-stream launch per row group; decoded
                     # bits are copied into the preallocated columns dtype-
                     # blind (view) so float/int columns both stay bit-exact
-                    outs = _device_decode_pages([p for p, _, _ in deferred])
-                    for (plan, dest, off), vals in zip(deferred, outs):
-                        dest[off : off + plan.n_values] = vals.view(dest.dtype)
+                    with obs.span("rg.launch", cat="device", rg=rg_i,
+                                  pages=len(deferred)):
+                        outs = _device_decode_pages([p for p, _, _ in deferred])
+                        for (plan, dest, off), vals in zip(deferred, outs):
+                            dest[off : off + plan.n_values] = vals.view(dest.dtype)
         finally:
             src_iter.close()
 
@@ -700,9 +750,12 @@ class SpatialParquetReader:
             geo = None
         extras = {k: v[:we] for k, v in extra_all.items()}
         if refine and bbox is not None and geo is not None:
-            keep = _records_intersecting(geo, bbox)
-            geo = permute_records(geo, keep)
-            extras = {k: v[keep] for k, v in extras.items()}
+            with obs.span("refine.host", cat="refine"):
+                keep = _records_intersecting(geo, bbox)
+                geo = permute_records(geo, keep)
+                extras = {k: v[keep] for k, v in extras.items()}
+            obs.count("pruned.record_bytes",
+                      (w - geo.n_values) * 2 * self.coord_dtype.itemsize)
         stats.records_returned = geo.n_records if geo is not None else (
             len(next(iter(extras.values()))) if extras else 0
         )
@@ -760,6 +813,7 @@ class SpatialParquetReader:
         we = 0
 
         level_parts = (types_parts, type_rep_parts, rep_parts, defn_parts)
+        vals_pruned = 0  # refine-dropped values (record-level byte pruning)
         src_iter = self._iter_sources(items, coalesce)
         try:
             for (rg_i, rg, runs, base, extra_pages, _ranges), src in src_iter:
@@ -771,38 +825,44 @@ class SpatialParquetReader:
                 pairs: list[tuple[int, int]] = []   # local record range per pair
                 vc_parts: list[np.ndarray] = []
                 local_base = 0
-                for p0, p1 in runs:
-                    j0, j1 = base + p0, base + p1 - 1
-                    r0 = int(idx.rec_start[j0])
-                    r1 = int(idx.rec_start[j1] + idx.rec_count[j1])
-                    stats.records_scanned += r1 - r0
-                    for p in range(p0, p1):
-                        j = base + p
-                        meta_x = PageMeta.from_dict(xp[p])
-                        meta_y = PageMeta.from_dict(yp[p])
-                        # checksums gate the launch chain: a corrupt page is
-                        # caught here, before any plan or Pallas kernel sees it
-                        blob_x = self._checked_blob(
-                            src, int(idx.x_offset[j]), int(idx.x_nbytes[j]),
-                            meta_x.crc, stats, f"x page {p} of row group {rg_i}")
-                        blob_y = self._checked_blob(
-                            src, int(idx.y_offset[j]), int(idx.y_nbytes[j]),
-                            meta_y.crc, stats, f"y page {p} of row group {rg_i}")
-                        plans.append(page_stream_plan(
-                            blob_x, meta_x, dtype, self.codec))
-                        plans.append(page_stream_plan(
-                            blob_y, meta_y, dtype, self.codec))
-                        lo_loc = local_base + int(idx.rec_start[j]) - r0
-                        pairs.append((lo_loc, lo_loc + int(idx.rec_count[j])))
-                    stats.bytes_read += int(
-                        idx.x_nbytes[j0 : j1 + 1].sum() + idx.y_nbytes[j0 : j1 + 1].sum()
-                    )
-                    vc_parts.append(rec_vcounts_rg[r0:r1])
-                    local_base += r1 - r0
-                    lv.append_run(level_parts, r0, r1)
-                    self._decode_run_extras(src, extra_pages, extra_all, we,
-                                            p0, p1, stats)
-                    we += r1 - r0
+                plan_span = obs.span("rg.plan", cat="plan", rg=rg_i)
+                with plan_span:
+                    for p0, p1 in runs:
+                        j0, j1 = base + p0, base + p1 - 1
+                        r0 = int(idx.rec_start[j0])
+                        r1 = int(idx.rec_start[j1] + idx.rec_count[j1])
+                        stats.records_scanned += r1 - r0
+                        for p in range(p0, p1):
+                            j = base + p
+                            meta_x = PageMeta.from_dict(xp[p])
+                            meta_y = PageMeta.from_dict(yp[p])
+                            # checksums gate the launch chain: a corrupt page
+                            # is caught here, before any plan or Pallas
+                            # kernel sees it
+                            blob_x = self._checked_blob(
+                                src, int(idx.x_offset[j]), int(idx.x_nbytes[j]),
+                                meta_x.crc, stats,
+                                f"x page {p} of row group {rg_i}")
+                            blob_y = self._checked_blob(
+                                src, int(idx.y_offset[j]), int(idx.y_nbytes[j]),
+                                meta_y.crc, stats,
+                                f"y page {p} of row group {rg_i}")
+                            plans.append(page_stream_plan(
+                                blob_x, meta_x, dtype, self.codec))
+                            plans.append(page_stream_plan(
+                                blob_y, meta_y, dtype, self.codec))
+                            lo_loc = local_base + int(idx.rec_start[j]) - r0
+                            pairs.append((lo_loc, lo_loc + int(idx.rec_count[j])))
+                        stats.bytes_read += int(
+                            idx.x_nbytes[j0 : j1 + 1].sum() + idx.y_nbytes[j0 : j1 + 1].sum()
+                        )
+                        vc_parts.append(rec_vcounts_rg[r0:r1])
+                        local_base += r1 - r0
+                        lv.append_run(level_parts, r0, r1)
+                        self._decode_run_extras(src, extra_pages, extra_all, we,
+                                                p0, p1, stats)
+                        we += r1 - r0
+                    plan_span.add(pages=len(pairs))
                 rec_vcounts = (np.concatenate(vc_parts) if vc_parts
                                else np.zeros(0, np.int64))
 
@@ -812,38 +872,51 @@ class SpatialParquetReader:
                     if kind == "host":
                         # a single page too large for any launch: decode this
                         # pair on the host (same bits via fp_delta_execute)
-                        x_v = fp_delta_execute(cplans[0])
-                        y_v = fp_delta_execute(cplans[1])
-                        keep_c = (_bbox_keep_mask(x_v, y_v, vc, bbox)
-                                  if do_refine else np.ones(len(vc), bool))
-                        starts = np.cumsum(vc) - vc
-                        iv = ragged_ranges(starts[keep_c], vc[keep_c])
-                        xs, ys = x_v[iv], y_v[iv]
+                        with obs.span("rg.launch", cat="decode", rg=rg_i,
+                                      kind="host"):
+                            x_v = fp_delta_execute(cplans[0])
+                            y_v = fp_delta_execute(cplans[1])
+                            keep_c = (_bbox_keep_mask(x_v, y_v, vc, bbox)
+                                      if do_refine else np.ones(len(vc), bool))
+                            starts = np.cumsum(vc) - vc
+                            iv = ragged_ranges(starts[keep_c], vc[keep_c])
+                            xs, ys = x_v[iv], y_v[iv]
                         if keep_on_device:
                             xs = DeviceCoords.from_numpy(xs)
                             ys = DeviceCoords.from_numpy(ys)
+                        if do_refine and obs.enabled():
+                            vals_pruned += int(vc.sum() - vc[keep_c].sum())
                         keep_parts.append(keep_c)
                         x_parts.append(xs)
                         y_parts.append(ys)
                         continue
-                    stream = build_page_stream(cplans)
-                    aux = build_refine_aux(
-                        stream, [(a - rl, b - rl) for a, b in cpairs], vc)
-                    if do_refine:
-                        res = decode_refine_stream(stream, aux, bbox)
-                        keep_c, lo_d, hi_d = res.keep, res.lo, res.hi
-                    else:
-                        lo_d, hi_d = decode_stream_device(stream)
-                        keep_c = np.ones(len(vc), bool)
+                    with obs.span("rg.launch", cat="device", rg=rg_i,
+                                  kind="refine" if do_refine else "decode",
+                                  pairs=len(cpairs)):
+                        stream = build_page_stream(cplans)
+                        aux = build_refine_aux(
+                            stream, [(a - rl, b - rl) for a, b in cpairs], vc)
+                        if do_refine:
+                            res = decode_refine_stream(stream, aux, bbox)
+                            keep_c, lo_d, hi_d = res.keep, res.lo, res.hi
+                        else:
+                            lo_d, hi_d = decode_stream_device(stream)
+                            keep_c = np.ones(len(vc), bool)
+                    if do_refine and obs.enabled():
+                        vals_pruned += int(vc.sum() - vc[keep_c].sum())
                     keep_parts.append(keep_c)
-                    ix = ragged_ranges(aux.x_start[keep_c], aux.counts[keep_c])
-                    iy = ragged_ranges(aux.y_start[keep_c], aux.counts[keep_c])
-                    x_parts.append(gather_stream_values(
-                        lo_d, hi_d, ix, width, dtype, keep_on_device=keep_on_device))
-                    y_parts.append(gather_stream_values(
-                        lo_d, hi_d, iy, width, dtype, keep_on_device=keep_on_device))
+                    with obs.span("rg.gather", cat="transfer", rg=rg_i):
+                        ix = ragged_ranges(aux.x_start[keep_c], aux.counts[keep_c])
+                        iy = ragged_ranges(aux.y_start[keep_c], aux.counts[keep_c])
+                        x_parts.append(gather_stream_values(
+                            lo_d, hi_d, ix, width, dtype,
+                            keep_on_device=keep_on_device))
+                        y_parts.append(gather_stream_values(
+                            lo_d, hi_d, iy, width, dtype,
+                            keep_on_device=keep_on_device))
         finally:
             src_iter.close()
+        obs.count("pruned.record_bytes", vals_pruned * 2 * dtype.itemsize)
 
         keep_all = (np.concatenate(keep_parts) if keep_parts
                     else np.zeros(0, bool))

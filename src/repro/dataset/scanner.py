@@ -30,14 +30,17 @@ pruning ratios are measured against the whole dataset.
 
 from __future__ import annotations
 
+import time
 from concurrent.futures import ThreadPoolExecutor
 
 import numpy as np
 
+from repro import obs
 from repro.core.columnar import GeometryColumns, assemble
 from repro.core.geometry import Geometry
 from repro.core.reader import ReadStats, SpatialParquetReader
 from repro.core.writer import concat_columns
+from repro.io.source import LocalFileSource, SourceStats
 
 from .errors import ShardFailure, ShardReadError
 from .index import DatasetIndex
@@ -87,45 +90,74 @@ class SpatialDatasetScanner:
         self.n_records = self.manifest.n_records
 
     # ------------------------------------------------------------- internals
-    def _open_shard(self, path: str) -> SpatialParquetReader:
-        kwargs = dict(coalesce_max_gap=self.coalesce_max_gap,
-                      prefetch_row_groups=self.prefetch_row_groups,
-                      verify_checksums=self.verify_checksums)
+    def _open_source(self, path: str):
         if self.source_factory is not None:
-            return SpatialParquetReader(source=self.source_factory(path),
-                                        **kwargs)
-        return SpatialParquetReader(path, **kwargs)
+            return self.source_factory(path)
+        return LocalFileSource(path)
+
+    def _open_shard(self, path: str) -> SpatialParquetReader:
+        return SpatialParquetReader(
+            source=self._open_source(path),
+            coalesce_max_gap=self.coalesce_max_gap,
+            prefetch_row_groups=self.prefetch_row_groups,
+            verify_checksums=self.verify_checksums)
 
     def _read_shard_once(self, path: str, bbox, columns, refine, coalesce,
                          device, keep_on_device):
-        with self._open_shard(path) as r:
-            return r.read_columnar(
-                bbox=bbox, columns=columns, refine=refine, coalesce=coalesce,
-                device=device, keep_on_device=keep_on_device,
-            )
+        src = self._open_source(path)
+        try:
+            with SpatialParquetReader(
+                    source=src, coalesce_max_gap=self.coalesce_max_gap,
+                    prefetch_row_groups=self.prefetch_row_groups,
+                    verify_checksums=self.verify_checksums) as r:
+                return r.read_columnar(
+                    bbox=bbox, columns=columns, refine=refine,
+                    coalesce=coalesce, device=device,
+                    keep_on_device=keep_on_device,
+                )
+        except Exception as exc:
+            # a failed attempt still did real I/O (and maybe retried,
+            # timed out, hit the cache); hand its accrued SourceStats to
+            # the caller so degraded scans keep the counters. Each attempt
+            # gets a fresh source, so .stats IS the attempt's delta.
+            exc.spqf_source_stats = src.stats.copy()
+            raise
 
     def _read_shard(self, shard_i: int, bbox, columns, refine, coalesce,
                     device, keep_on_device):
         """Read one shard under the scanner's error policy.
 
-        Returns ``(result, extra_attempts, failure)`` where exactly one of
-        ``result`` / ``failure`` is set; raises only under ``on_error=
-        "raise"`` (immediately) or ``"retry"`` (after exhausting
-        ``shard_retries``), always as an attributed :class:`ShardReadError`.
+        Returns ``(result, extra_attempts, failure, failed_stats)`` where
+        exactly one of ``result`` / ``failure`` is set and ``failed_stats``
+        is the summed :class:`SourceStats` of every *failed* attempt (the
+        successful attempt folds its own deltas inside ``read_columnar``);
+        raises only under ``on_error="raise"`` (immediately) or ``"retry"``
+        (after exhausting ``shard_retries``), always as an attributed
+        :class:`ShardReadError`.
         """
         path = shard_path(self.root, self.manifest.shards[shard_i])
         retries = 0 if self.on_error == "raise" else self.shard_retries
         last: Exception | None = None
-        for attempt in range(retries + 1):
-            try:
-                res = self._read_shard_once(path, bbox, columns, refine,
-                                            coalesce, device, keep_on_device)
-                return res, attempt, None
-            except Exception as exc:
-                last = exc
+        failed = SourceStats()
+        with obs.span("shard", shard=shard_i, path=path):
+            for attempt in range(retries + 1):
+                try:
+                    res = self._read_shard_once(
+                        path, bbox, columns, refine, coalesce, device,
+                        keep_on_device)
+                    return res, attempt, None, failed
+                except Exception as exc:
+                    last = exc
+                    partial = getattr(exc, "spqf_source_stats", None)
+                    if partial is not None:
+                        failed = failed + partial
+                    obs.instant("shard.error", shard=shard_i,
+                                attempt=attempt, error=type(exc).__name__)
         if self.on_error == "skip":
+            obs.instant("shard.skip", shard=shard_i,
+                        error=type(last).__name__)
             failure = ShardFailure.from_error(shard_i, path, last, retries + 1)
-            return None, retries, failure
+            return None, retries, failure, failed
         raise ShardReadError(shard_i, path, last) from last
 
     # -------------------------------------------------------------- scan API
@@ -152,23 +184,56 @@ class SpatialDatasetScanner:
         coalesced range reads, exactly like the host decode.
         ``keep_on_device=True`` returns device-resident coordinates merged
         across shards on the accelerator.
+
+        With telemetry on (``repro.obs.enable()``) the query runs inside a
+        ``scan.dataset`` span with one ``shard`` child span per surviving
+        shard (worker threads inherit the span context), and on return
+        records the end-to-end latency histogram, the
+        ``scan.host_cpu_s_per_gb`` gauge and the shard-level pruned-bytes
+        counter. Telemetry off is the plain, allocation-identical path.
         """
+        if not obs.enabled():
+            return self._scan_impl(bbox, columns, refine, parallel, coalesce,
+                                   device, keep_on_device)
+        t0 = time.perf_counter()
+        c0 = time.process_time()
+        with obs.span("scan.dataset", root=self.root, device=device,
+                      refine=bool(refine)) as sp:
+            geo, extras, stats = self._scan_impl(
+                bbox, columns, refine, parallel, coalesce, device,
+                keep_on_device)
+            sp.add(shards_read=stats.shards_read,
+                   records=stats.records_returned)
+        wall = time.perf_counter() - t0
+        cpu = time.process_time() - c0
+        obs.observe("scan.dataset_latency_s", wall)
+        scanned_gb = stats.bytes_read / 1e9
+        if scanned_gb > 0:
+            # the aggregate wins over the per-shard values set mid-scan
+            obs.gauge("scan.host_cpu_s_per_gb", cpu / scanned_gb)
+        return geo, extras, stats
+
+    def _scan_impl(self, bbox, columns, refine, parallel, coalesce, device,
+                   keep_on_device):
         hit = self.index.query(bbox)
         hit_set = set(int(i) for i in hit)
         stats = ReadStats(shards_total=len(self.index), shards_read=len(hit))
         # pruned shards still count toward the totals (read side stays zero)
+        pruned_bytes = 0
         for i, shard in enumerate(self.manifest.shards):
             if i not in hit_set:
                 stats.pages_total += shard.n_pages
                 stats.bytes_total += shard.data_bytes
+                pruned_bytes += shard.data_bytes
+        obs.count("pruned.shard_bytes", pruned_bytes)
 
         if len(hit) == 0:
             outcomes = []
         elif parallel and self.max_workers > 1 and len(hit) > 1:
             with ThreadPoolExecutor(max_workers=self.max_workers) as pool:
                 futures = [
-                    pool.submit(self._read_shard, int(i), bbox, columns,
-                                refine, coalesce, device, keep_on_device)
+                    obs.submit(pool, self._read_shard, int(i), bbox, columns,
+                               refine, coalesce, device, keep_on_device)
                     for i in hit
                 ]
                 # gather in submission (manifest) order: deterministic output
@@ -181,15 +246,26 @@ class SpatialDatasetScanner:
             ]
 
         # degraded-mode accounting: skipped shards leave the result but are
-        # attributed in stats.failures; extra per-shard attempts accumulate
+        # attributed in stats.failures; extra per-shard attempts accumulate,
+        # and the partial SourceStats of every *failed* attempt fold into the
+        # aggregate so retry/timeout/cache counters survive degraded scans
         results = []
-        for res, attempts, failure in outcomes:
+        for res, attempts, failure, failed_src in outcomes:
             stats.shard_retries += attempts
+            stats.retries += failed_src.retries
+            stats.timeouts += failed_src.timeouts
+            stats.cache_hits += failed_src.cache_hits
+            stats.cache_misses += failed_src.cache_misses
+            obs.fold_source_stats(failed_src, prefix="io.failed_attempts")
             if failure is not None:
                 stats.failures.append(failure)
                 stats.shards_read -= 1  # it never contributed bytes/records
             else:
                 results.append(res)
+        obs.count("read.shard_retries", stats.shard_retries)
+        obs.count("read.shards_failed", len(stats.failures))
+        obs.count("read.shards_total", stats.shards_total)
+        obs.count("read.shards_read", stats.shards_read)
 
         geos = [g for g, _, _ in results if g is not None]
         # concat_columns merges DeviceCoords shards on the accelerator

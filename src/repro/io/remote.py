@@ -36,6 +36,8 @@ import time
 from collections import OrderedDict
 from concurrent.futures import ThreadPoolExecutor
 
+from repro import obs
+
 from .source import SourceStats
 
 
@@ -139,9 +141,11 @@ class RemoteRangeSource:
             try:
                 status, body = self._server.get(offset, nbytes)
             except Exception as exc:  # transport-level failure: retryable
+                obs.observe("io.range_get_s", time.monotonic() - t0)
                 last = TransientServerError(f"transport error: {exc!r}")
             else:
                 elapsed = time.monotonic() - t0
+                obs.observe("io.range_get_s", elapsed)
                 if elapsed > self.timeout:
                     self.stats.timeouts += 1
                     last = RequestTimeout(
@@ -159,6 +163,7 @@ class RemoteRangeSource:
                             f"bytes at offset {offset}")
                     else:
                         self.stats.bytes_fetched += len(body)
+                        obs.count("io.bytes_fetched", len(body))
                         return body
                 else:
                     raise RangeRequestError(
@@ -167,7 +172,10 @@ class RemoteRangeSource:
             if attempt == self.max_retries:
                 raise RetriesExhausted(offset, nbytes, attempt + 1, last) from last
             self.stats.retries += 1
-            self._backoff_sleep(attempt)
+            obs.instant("io.retry", cat="io", offset=offset, nbytes=nbytes,
+                        attempt=attempt, error=type(last).__name__)
+            with obs.span("io.backoff", cat="io", attempt=attempt):
+                self._backoff_sleep(attempt)
         raise AssertionError("unreachable")
 
     def _fetch_block_run(self, b0: int, b1: int) -> dict[int, bytes]:

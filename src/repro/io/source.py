@@ -19,6 +19,8 @@ import os
 from dataclasses import dataclass
 from typing import Protocol, runtime_checkable
 
+from repro import obs
+
 
 @dataclass
 class SourceStats:
@@ -33,6 +35,11 @@ class SourceStats:
 
     def copy(self) -> "SourceStats":
         return SourceStats(**self.__dict__)
+
+    def __add__(self, other: "SourceStats") -> "SourceStats":
+        return SourceStats(**{
+            k: getattr(self, k) + getattr(other, k) for k in self.__dict__
+        })
 
     def __sub__(self, other: "SourceStats") -> "SourceStats":
         return SourceStats(**{
@@ -89,9 +96,10 @@ class LocalFileSource:
         return os.fstat(self._fh.fileno()).st_size
 
     def readinto_at(self, offset: int, buf) -> int:
-        self._fh.seek(offset)
-        self.stats.requests += 1
-        got = self._fh.readinto(buf)
+        with obs.timed("io.read_s"):
+            self._fh.seek(offset)
+            self.stats.requests += 1
+            got = self._fh.readinto(buf)
         self.stats.bytes_fetched += int(got or 0)
         return int(got or 0)
 

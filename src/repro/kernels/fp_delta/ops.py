@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core.columnar import DeviceCoords
 from repro.core.fp_delta import HEADER_BITS, FPDeltaPlan, fp_delta_execute
 
@@ -52,17 +53,27 @@ _COMPILED: dict[tuple, object] = {}
 
 
 def _aot(key: tuple, jitted, args: tuple, statics: dict | None = None):
-    """Return the compiled executable for ``jitted`` at ``args``' shapes."""
+    """Return the compiled executable for ``jitted`` at ``args``' shapes.
+
+    Compile-vs-execute attribution: a cache miss traces+compiles inside a
+    ``jit.compile`` span (cat ``jit``) and bumps the ``jit.compiles``
+    counter; a hit bumps ``jit.cache_hits`` — so a trace separates one-time
+    compilation cost from steady-state launch cost per shape bucket.
+    """
     fn = _COMPILED.get(key)
     if fn is None:
         with _COMPILE_LOCK:
             fn = _COMPILED.get(key)
             if fn is None:
-                shapes = tuple(
-                    jax.ShapeDtypeStruct(np.shape(a), a.dtype) for a in args
-                )
-                fn = jitted.lower(*shapes, **(statics or {})).compile()
+                with obs.span("jit.compile", cat="jit", key=repr(key)):
+                    shapes = tuple(
+                        jax.ShapeDtypeStruct(np.shape(a), a.dtype) for a in args
+                    )
+                    fn = jitted.lower(*shapes, **(statics or {})).compile()
+                obs.count("jit.compiles")
                 _COMPILED[key] = fn
+                return fn
+    obs.count("jit.cache_hits")
     return fn
 
 
@@ -342,7 +353,10 @@ def decode_stream_device(stream: PageStream, *, use_pallas: bool = True,
     args = _stream_args(stream)
     key = ("limbs", stream.words32.shape[0], stream.tok_off.shape[0],
            use_pallas, interp)
-    return _aot(key, _limbs_jit(use_pallas, interp), args)(*args)
+    fn = _aot(key, _limbs_jit(use_pallas, interp), args)
+    with obs.span("device.decode_launch", cat="device",
+                  values=stream.n_values, width=stream.width):
+        return fn(*args)
 
 
 def decode_page_stream(stream: PageStream, *, use_pallas: bool = True,
@@ -381,9 +395,10 @@ def decode_pages(plans, *, use_pallas: bool = True,
     def flush(chunk: list[FPDeltaPlan]) -> None:
         if not chunk:
             return
-        stream = build_page_stream(chunk)
-        vals = decode_page_stream(
-            stream, use_pallas=use_pallas, interpret=interpret)
+        with obs.span("device.decode_pages", cat="device", pages=len(chunk)):
+            stream = build_page_stream(chunk)
+            vals = decode_page_stream(
+                stream, use_pallas=use_pallas, interpret=interpret)
         out.extend(np.split(vals, np.cumsum(stream.counts)[:-1]))
 
     chunk: list[FPDeltaPlan] = []
@@ -595,9 +610,13 @@ def decode_refine_stream(stream: PageStream, aux: RefineAux, bbox, *,
     args = _stream_args(stream) + (aux.seg_flag, aux.end_pos, aux.valid, qkeys)
     key = ("refine", stream.words32.shape[0], stream.tok_off.shape[0],
            aux.end_pos.shape[0], stream.width, use_pallas, interp)
-    lo, hi, keep = _aot(
-        key, _refine_jit(stream.width, use_pallas, interp), args)(*args)
-    return RefineResult(lo, hi, np.asarray(keep)[: aux.n_records])
+    fn = _aot(key, _refine_jit(stream.width, use_pallas, interp), args)
+    with obs.span("device.refine_launch", cat="device",
+                  values=stream.n_values, records=aux.n_records,
+                  width=stream.width):
+        lo, hi, keep = fn(*args)
+        keep = np.asarray(keep)[: aux.n_records]
+    return RefineResult(lo, hi, keep)
 
 
 _take_limbs_jit = jax.jit(
@@ -638,9 +657,14 @@ def gather_stream_values(lo, hi, idx: np.ndarray, width: int, dtype,
     idx_pad = np.zeros(size, np.int32)
     idx_pad[:n] = idx
     key = ("take", int(lo.shape[0]), size)
-    glo, ghi = _aot(key, _take_limbs_jit, (lo, hi, idx_pad))(lo, hi, idx_pad)
-    coords = DeviceCoords(glo[:n], ghi[:n] if width == 64 else None, dtype)
-    return coords if keep_on_device else coords.to_numpy()
+    fn = _aot(key, _take_limbs_jit, (lo, hi, idx_pad))
+    with obs.span("device.gather", cat="transfer", values=n,
+                  on_device=bool(keep_on_device)):
+        glo, ghi = fn(lo, hi, idx_pad)
+        coords = DeviceCoords(glo[:n], ghi[:n] if width == 64 else None, dtype)
+        if not keep_on_device:
+            coords = coords.to_numpy()
+    return coords
 
 
 def compress_array(x: np.ndarray, **kw) -> bytes:

@@ -1,0 +1,347 @@
+"""Observability layer: tracer no-op guarantees, span attribution, export.
+
+Three properties carry the whole subsystem and are pinned here:
+
+1. **Disabled is free and invisible** — ``obs.span`` returns one shared
+   singleton (no allocation), and a scan traced vs untraced returns
+   bit-identical bytes.
+2. **Attribution is correct** — spans nest by explicit parent ids, survive
+   thread hand-offs (scanner workers, prefetch), and the fused device scan's
+   trace covers every pipeline stage with per-shard / per-row-group args.
+3. **The numbers are right** — histogram quantile estimates track numpy
+   percentiles, stats folding matches the stats objects, and a skip-policy
+   scan keeps the failed attempts' SourceStats (the silent-drop regression).
+"""
+
+import json
+import os
+import threading
+from concurrent.futures import ThreadPoolExecutor
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core.columnar import from_ragged
+from repro.core.reader import ReadStats, SpatialParquetReader
+from repro.core.writer import write_file
+from repro.dataset import SpatialDatasetScanner, write_dataset
+from repro.io import LocalFileSource
+from repro.obs.metrics import Histogram, MetricsRegistry
+from repro.obs.trace import NULL_SPAN, Tracer
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(11)
+
+
+@pytest.fixture(autouse=True)
+def _obs_off():
+    """Every test starts and ends with telemetry disabled."""
+    obs.disable()
+    yield
+    obs.disable()
+
+
+def _point_cols(rng, n, spread=100.0):
+    pts = np.round(rng.uniform(-spread, spread, (n, 2)), 6)
+    return from_ragged(np.ones(n, np.uint8), pts,
+                       np.ones(n, np.int64), np.ones(n, np.int64))
+
+
+def _fingerprint(geo, extras):
+    geo = geo.coords_to_host()
+    parts = [np.asarray(getattr(geo, f)).tobytes()
+             for f in ("types", "type_rep", "rep", "defn", "x", "y")]
+    for k in sorted(extras):
+        parts.append(np.asarray(extras[k]).tobytes())
+    return b"".join(parts)
+
+
+@pytest.fixture
+def sample_file(rng, tmp_path):
+    path = str(tmp_path / "obs.spqf")
+    cols = _point_cols(rng, 4000)
+    tag = rng.integers(0, 50, 4000).astype(np.int32)
+    write_file(path, columns=cols, extra={"tag": tag},
+               extra_schema={"tag": "<i4"}, page_values=512,
+               sort="hilbert", row_group_records=1000)
+    return path
+
+
+@pytest.fixture
+def lake(rng, tmp_path):
+    root = str(tmp_path / "lake")
+    os.makedirs(root)
+    write_dataset(root, columns=_point_cols(rng, 6000), n_shards=4,
+                  page_values=512)
+    return root
+
+
+# ------------------------------------------------------------ disabled = free
+def test_disabled_span_is_shared_singleton():
+    # no Span object is ever allocated while tracing is off
+    assert obs.span("decode", shard=1) is NULL_SPAN
+    assert obs.span("anything") is obs.span("else")
+    assert obs.timed("io.read_s") is NULL_SPAN
+    with obs.span("decode", rg=3) as sp:
+        assert sp is NULL_SPAN
+        sp.add(pages=7)  # attribute adds are absorbed
+    assert obs.current_span() is None
+
+
+def test_disabled_recorders_are_noops():
+    obs.count("a", 5)
+    obs.gauge("b", 1.0)
+    obs.observe("c", 0.1)
+    obs.instant("d")
+    assert obs.snapshot() == {"counters": {}, "gauges": {}, "histograms": {}}
+
+
+def test_disabled_submit_is_plain_submit():
+    with ThreadPoolExecutor(max_workers=1) as pool:
+        assert obs.submit(pool, lambda x: x + 1, 41).result() == 42
+
+
+def test_reads_bit_identical_tracing_on_vs_off(sample_file):
+    bbox = (-50.0, -50.0, 50.0, 50.0)
+    with SpatialParquetReader(sample_file) as r:
+        variants = [
+            dict(),
+            dict(bbox=bbox, refine=True),
+            dict(bbox=bbox, refine=True, device="jax"),
+        ]
+        for kw in variants:
+            g0, e0, s0 = r.read_columnar(**kw)
+            obs.enable()
+            try:
+                g1, e1, s1 = r.read_columnar(**kw)
+            finally:
+                obs.disable()
+            assert _fingerprint(g0, e0) == _fingerprint(g1, e1), kw
+            assert s0.bytes_read == s1.bytes_read
+
+
+def test_scan_bit_identical_tracing_on_vs_off(lake):
+    sc = SpatialDatasetScanner(lake)
+    bbox = (-60.0, -60.0, 60.0, 60.0)
+    g0, e0, _ = sc.scan(bbox=bbox, refine=True, device="jax")
+    obs.enable()
+    try:
+        g1, e1, _ = sc.scan(bbox=bbox, refine=True, device="jax")
+    finally:
+        obs.disable()
+    assert _fingerprint(g0, e0) == _fingerprint(g1, e1)
+
+
+# --------------------------------------------------- nesting + thread handoff
+def test_span_nesting_parent_ids():
+    tracer = obs.enable()
+    with obs.span("outer") as outer:
+        with obs.span("inner") as inner:
+            assert inner.parent_id == outer.span_id
+            assert obs.current_span() is inner
+        assert obs.current_span() is outer
+    obs.disable()
+    ev = {e["name"]: e for e in tracer.spans()}
+    assert ev["inner"]["args"]["parent_id"] == ev["outer"]["args"]["span_id"]
+    assert ev["outer"]["args"]["parent_id"] == 0
+
+
+def test_span_handoff_across_threads():
+    tracer = obs.enable()
+    with ThreadPoolExecutor(max_workers=2) as pool:
+        with obs.span("parent") as parent:
+            def worker(i):
+                with obs.span("child", i=i) as c:
+                    return c.parent_id, threading.get_ident()
+            futs = [obs.submit(pool, worker, i) for i in range(4)]
+            got = [f.result() for f in futs]
+    obs.disable()
+    # every child, on whatever thread, parents under the submitting span
+    assert all(pid == parent.span_id for pid, _ in got)
+    children = tracer.spans("child")
+    assert len(children) == 4
+    assert {e["args"]["i"] for e in children} == {0, 1, 2, 3}
+    # real OS thread ids recorded (pool threads differ from main)
+    assert {e["tid"] for e in children} <= {t for _, t in got}
+
+
+def test_scanner_trace_per_shard_attribution(lake):
+    sc = SpatialDatasetScanner(lake)
+    tracer = obs.enable()
+    try:
+        sc.scan(bbox=None, refine=False)
+    finally:
+        obs.disable()
+    ds = tracer.spans("scan.dataset")
+    assert len(ds) == 1
+    shards = tracer.spans("shard")
+    assert {e["args"]["shard"] for e in shards} == {0, 1, 2, 3}
+    # worker-thread shard spans all parent under the dataset span
+    assert {e["args"]["parent_id"] for e in shards} == \
+        {ds[0]["args"]["span_id"]}
+    # row-group work attributes to a row group and nests under some span
+    rgs = tracer.spans("rg.decode") + tracer.spans("rg.launch")
+    assert rgs and all("rg" in e["args"] for e in rgs)
+
+
+def test_fused_device_scan_trace_covers_stages(lake):
+    sc = SpatialDatasetScanner(lake)
+    bbox = (-60.0, -60.0, 60.0, 60.0)
+    tracer = obs.enable()
+    try:
+        sc.scan(bbox=bbox, refine=True, device="jax")
+    finally:
+        obs.disable()
+    names = {e["name"] for e in tracer.spans()}
+    # plan → fetch → decode/refine launch → transfer, shard + file context
+    assert {"scan.dataset", "shard", "scan.file", "rg.plan", "rg.fetch",
+            "rg.launch"} <= names
+    launches = tracer.spans("rg.launch")
+    assert all("rg" in e["args"] for e in launches)
+    snap = obs.snapshot()
+    assert snap["counters"]["read.shards_read"] == 4
+    assert "scan.dataset_latency_s" in snap["histograms"]
+    assert "scan.latency_s" in snap["histograms"]
+    assert snap["gauges"]["scan.host_cpu_s_per_gb"] > 0
+
+
+# ------------------------------------------------------------------- export
+def test_chrome_trace_export_roundtrip(tmp_path, lake):
+    sc = SpatialDatasetScanner(lake)
+    tracer = obs.enable()
+    try:
+        sc.scan()
+    finally:
+        obs.disable()
+    out = str(tmp_path / "trace.json")
+    tracer.export(out, metrics=obs.snapshot())
+    with open(out) as fh:
+        doc = json.load(fh)
+    assert doc["displayTimeUnit"] == "ms"
+    events = doc["traceEvents"]
+    # schema: every event carries the chrome trace-event required fields
+    for ev in events:
+        assert {"name", "ph", "pid"} <= set(ev)
+        assert ev["ph"] in ("X", "i", "M")
+        if ev["ph"] == "X":
+            assert ev["ts"] >= 0 and ev["dur"] >= 0
+            assert {"span_id", "parent_id"} <= set(ev["args"])
+    # thread metadata names the worker threads
+    meta = [e for e in events if e["ph"] == "M"]
+    assert meta and all(e["name"] == "thread_name" for e in meta)
+    # the metrics snapshot rides along without breaking the trace shape
+    assert "counters" in doc["metrics"]
+
+
+def test_tracer_summary_aggregates():
+    tracer = Tracer()
+    for i in range(3):
+        span = type("S", (), {"name": "stage", "cat": "x", "args": {},
+                              "span_id": i + 1, "parent_id": 0})()
+        tracer._complete(span, 0, 1000 * (i + 1))
+    (row,) = tracer.summary()
+    assert row["name"] == "stage" and row["count"] == 3
+    assert row["total_ms"] == pytest.approx(0.006)
+    assert row["max_ms"] == pytest.approx(0.003)
+
+
+# ------------------------------------------------------------------ metrics
+def test_histogram_quantiles_track_numpy(rng):
+    h = Histogram("lat")
+    samples = rng.lognormal(mean=-4.0, sigma=1.5, size=5000)
+    for v in samples:
+        h.observe(v)
+    for q in (0.5, 0.9, 0.99):
+        est = h.quantile(q)
+        exact = float(np.percentile(samples, q * 100))
+        assert est == pytest.approx(exact, rel=0.15), q
+    snap = h.snapshot()
+    assert snap["count"] == 5000
+    assert snap["min"] == pytest.approx(samples.min())
+    assert snap["max"] == pytest.approx(samples.max())
+
+
+def test_histogram_edges():
+    h = Histogram("x")
+    assert np.isnan(h.quantile(0.5))
+    h.observe(0.01)
+    # one observation: every quantile collapses to it (clamped bounds)
+    assert h.quantile(0.0) == pytest.approx(0.01)
+    assert h.quantile(1.0) == pytest.approx(0.01)
+    # out-of-range values land in clamped under/overflow buckets
+    h2 = Histogram("y", bounds=[1.0, 2.0])
+    h2.observe(0.5)
+    h2.observe(10.0)
+    assert h2.quantile(0.0) == pytest.approx(0.5)
+    assert h2.quantile(1.0) == pytest.approx(10.0)
+
+
+def test_fold_read_stats_counters():
+    reg = MetricsRegistry()
+    st = ReadStats(pages_total=10, pages_read=4, bytes_total=1000,
+                   bytes_read=400, retries=2, cache_hits=3)
+    reg.fold_read_stats(st)
+    reg.fold_read_stats(st)  # accumulates across queries
+    snap = reg.snapshot()
+    assert snap["counters"]["read.pages_read"] == 8
+    assert snap["counters"]["read.retries"] == 4
+    assert snap["counters"]["read.cache_hits"] == 6
+    # bools and non-numerics never become counters
+    assert "read.failures" in snap["counters"]
+
+
+# --------------------------------------------- satellite: failed-attempt stats
+def test_skip_policy_keeps_failed_attempt_source_stats(lake):
+    """A skipped shard's attempts did real I/O (and recoveries); their
+    SourceStats deltas must fold into the aggregate, not vanish."""
+    bad = {"n": 0}
+
+    def factory(path):
+        src = LocalFileSource(path)
+        if path.endswith("shard-00000.spqf"):
+            def boom(offset, nbytes, *, refresh=False):
+                # a failing attempt that accrued recoveries before dying
+                src.stats.requests += 1
+                src.stats.retries += 3
+                src.stats.timeouts += 1
+                src.stats.cache_hits += 2
+                src.stats.cache_misses += 5
+                bad["n"] += 1
+                raise IOError("injected failure")
+            src.read_at = boom
+            src.readinto_at = lambda off, buf: boom(off, len(buf))
+        return src
+
+    sc = SpatialDatasetScanner(lake, on_error="skip", shard_retries=1,
+                               source_factory=factory)
+    geo, _, st = sc.scan()
+    assert bad["n"] >= 2  # both attempts really failed
+    assert len(st.failures) == 1 and st.failures[0].shard_index == 0
+    assert st.shards_read == 3 and geo is not None
+    # the regression: every failed attempt's deltas are in the aggregate
+    n = bad["n"]
+    assert st.retries == 3 * n
+    assert st.timeouts == 1 * n
+    assert st.cache_hits == 2 * n
+    assert st.cache_misses == 5 * n
+
+
+def test_raise_policy_attaches_partial_stats(lake):
+    def factory(path):
+        src = LocalFileSource(path)
+        if path.endswith("shard-00001.spqf"):
+            def boom(offset, nbytes, *, refresh=False):
+                src.stats.retries += 7
+                raise IOError("injected failure")
+            src.read_at = boom
+            src.readinto_at = lambda off, buf: boom(off, len(buf))
+        return src
+
+    sc = SpatialDatasetScanner(lake, on_error="raise", source_factory=factory)
+    with pytest.raises(Exception) as ei:
+        sc.scan()
+    cause = ei.value.__cause__
+    assert getattr(cause, "spqf_source_stats").retries == 7
