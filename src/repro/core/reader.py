@@ -318,6 +318,47 @@ class _RowGroupLevels:
         return np.diff(np.append(value_idx[self.slot_starts], total))
 
 
+@dataclass
+class RowGroupChunk:
+    """One launch-chunk of a fully decoded row group (``device="jax"``).
+
+    ``kind == "dev"`` carries an *unlaunched* packed page stream plus its
+    refine aux (record segmentation) — the serve tier fuses multi-query
+    refinement into the launch. ``kind == "host"`` carries decoded x/y
+    values for pages the device path cannot pack (host-fallback codecs).
+    ``rec_lo``/``rec_hi`` are the rg-local record range the chunk covers.
+    """
+
+    kind: str
+    rec_lo: int
+    rec_hi: int
+    stream: object = None
+    aux: object = None
+    x: np.ndarray | None = None
+    y: np.ndarray | None = None
+
+
+@dataclass
+class RowGroupData:
+    """Every page of one row group, decoded once (see ``read_row_group``).
+
+    ``extras`` holds the full extra-column arrays (length ``n_records``);
+    ``nbytes`` is the stored bytes fetched to build this (levels + extras +
+    x/y pages) — the cache-attribution unit. Exactly one of ``x``/``y``
+    (``device="cpu"``) or ``chunks`` (``device="jax"``) is populated.
+    """
+
+    rg_i: int
+    n_records: int
+    rec_vcounts: np.ndarray
+    levels: _RowGroupLevels
+    extras: dict
+    nbytes: int
+    x: np.ndarray | None = None
+    y: np.ndarray | None = None
+    chunks: list[RowGroupChunk] | None = None
+
+
 class SpatialParquetReader:
     """Reader over one ``.spqf`` object.
 
@@ -950,6 +991,116 @@ class SpatialParquetReader:
             len(next(iter(extras.values()))) if extras else 0
         )
         return geo, extras, stats
+
+    # ---------------------------------------------- whole-row-group decode
+    def read_row_group(self, rg_i: int, *, columns=None,
+                       device: str = "cpu") -> "RowGroupData":
+        """Fetch + decode *every* page of one row group, independent of any
+        query bbox — the unit of the serve tier's decoded-row-group cache
+        (:mod:`repro.serve.query_scheduler`).
+
+        Pages are record-aligned, so a record's values (and therefore its
+        exact [min, max]) computed from the full row group are bit-identical
+        to the same record decoded through a bbox-pruned page run — the
+        property that lets one decode serve queries whose page sets differ.
+        ``device="cpu"`` fills ``x``/``y`` host arrays; ``device="jax"``
+        returns *unlaunched* per-chunk page streams (the caller owns the
+        launch so it can fuse multi-query refinement into it).
+        """
+        if device not in ("cpu", "jax"):
+            raise ValueError(f"device must be 'cpu' or 'jax', got {device!r}")
+        idx = self.index
+        rg = self.footer["row_groups"][rg_i]
+        base = int(np.searchsorted(idx.row_group, rg_i, side="left"))
+        n_pages = len(rg["x_pages"])
+        want_extra = (list(self.extra_schema) if columns is None
+                      else [c for c in columns if c in self.extra_schema])
+        extra_pages = {k: rg["extra"][k] for k in want_extra}
+        runs = [(0, n_pages)]
+        stats = ReadStats()
+        with obs.span("rg.read_full", cat="io", rg=rg_i, device=device):
+            src = _CoalescedRanges(
+                self._source,
+                self._rg_ranges(rg, runs, base, True, extra_pages),
+                self.coalesce_max_gap)
+            lv = self._decode_rg_levels(src, rg, stats)
+            rec_vcounts = lv.record_value_counts()
+            n_rec = lv.n_rec
+            extra_all = {
+                k: np.empty(n_rec, np.dtype(self.extra_schema[k]))
+                for k in want_extra
+            }
+            self._decode_run_extras(src, extra_pages, extra_all, 0,
+                                    0, n_pages, stats)
+            if n_pages:
+                j0, j1 = base, base + n_pages - 1
+                stats.bytes_read += int(idx.x_nbytes[j0 : j1 + 1].sum()
+                                        + idx.y_nbytes[j0 : j1 + 1].sum())
+            rec0 = int(idx.rec_start[base]) if n_pages else 0
+
+            def coord_blobs(p):
+                j = base + p
+                meta_x = PageMeta.from_dict(rg["x_pages"][p])
+                meta_y = PageMeta.from_dict(rg["y_pages"][p])
+                blob_x = self._checked_blob(
+                    src, int(idx.x_offset[j]), int(idx.x_nbytes[j]),
+                    meta_x.crc, stats, f"x page {p} of row group {rg_i}")
+                blob_y = self._checked_blob(
+                    src, int(idx.y_offset[j]), int(idx.y_nbytes[j]),
+                    meta_y.crc, stats, f"y page {p} of row group {rg_i}")
+                return meta_x, blob_x, meta_y, blob_y
+
+            if device == "cpu":
+                total_vals = int(idx.count[base : base + n_pages].sum())
+                x_all = np.empty(total_vals, self.coord_dtype)
+                y_all = np.empty(total_vals, self.coord_dtype)
+                w = 0
+                with obs.span("rg.decode", cat="decode", rg=rg_i, device="cpu"):
+                    for p in range(n_pages):
+                        meta_x, blob_x, meta_y, blob_y = coord_blobs(p)
+                        cnt = int(idx.count[base + p])
+                        decode_page(blob_x, meta_x, self.coord_dtype,
+                                    self.codec, out=x_all[w : w + cnt])
+                        decode_page(blob_y, meta_y, self.coord_dtype,
+                                    self.codec, out=y_all[w : w + cnt])
+                        w += cnt
+                return RowGroupData(rg_i, n_rec, rec_vcounts, lv, extra_all,
+                                    stats.bytes_read, x=x_all, y=y_all)
+
+            from repro.kernels.fp_delta import (
+                build_page_stream,
+                build_refine_aux,
+                chunk_plan_pairs,
+            )
+
+            plans: list = []
+            pairs: list[tuple[int, int]] = []
+            with obs.span("rg.plan", cat="plan", rg=rg_i, pages=n_pages):
+                for p in range(n_pages):
+                    meta_x, blob_x, meta_y, blob_y = coord_blobs(p)
+                    plans.append(page_stream_plan(
+                        blob_x, meta_x, self.coord_dtype, self.codec))
+                    plans.append(page_stream_plan(
+                        blob_y, meta_y, self.coord_dtype, self.codec))
+                    j = base + p
+                    r0 = int(idx.rec_start[j]) - rec0
+                    pairs.append((r0, r0 + int(idx.rec_count[j])))
+            chunks: list[RowGroupChunk] = []
+            for kind, cplans, cpairs, (rl, rh) in chunk_plan_pairs(plans, pairs):
+                if kind == "host":
+                    chunks.append(RowGroupChunk(
+                        "host", rl, rh,
+                        x=fp_delta_execute(cplans[0]),
+                        y=fp_delta_execute(cplans[1])))
+                    continue
+                stream = build_page_stream(cplans)
+                aux = build_refine_aux(
+                    stream, [(a - rl, b - rl) for a, b in cpairs],
+                    rec_vcounts[rl:rh])
+                chunks.append(RowGroupChunk("dev", rl, rh,
+                                            stream=stream, aux=aux))
+            return RowGroupData(rg_i, n_rec, rec_vcounts, lv, extra_all,
+                                stats.bytes_read, chunks=chunks)
 
     def read(self, bbox=None, refine: bool = False) -> tuple[list[Geometry], ReadStats]:
         """Object-API read returning Geometry instances."""

@@ -102,6 +102,15 @@ class SpatialDatasetScanner:
             prefetch_row_groups=self.prefetch_row_groups,
             verify_checksums=self.verify_checksums)
 
+    def open_shard(self, shard_i: int) -> SpatialParquetReader:
+        """Open shard ``shard_i`` as a long-lived reader (caller closes).
+
+        The serve tier (:mod:`repro.serve.query_scheduler`) keeps these open
+        across queries so row-group decodes can be shared; one-shot scans
+        should keep using :meth:`scan`, which owns its readers per call.
+        """
+        return self._open_shard(shard_path(self.root, self.manifest.shards[shard_i]))
+
     def _read_shard_once(self, path: str, bbox, columns, refine, coalesce,
                          device, keep_on_device):
         src = self._open_source(path)

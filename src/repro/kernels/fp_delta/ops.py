@@ -619,6 +619,159 @@ def decode_refine_stream(stream: PageStream, aux: RefineAux, bbox, *,
     return RefineResult(lo, hi, keep)
 
 
+# ------------------------------------------------- multi-query refinement
+# The serve-tier variant of the fused chain (repro.serve.query_scheduler):
+# one decode + segmented min/max launch answers Q in-flight bbox queries at
+# once by stacking the queries' order-key bounds into a (Q, 4, 2) operand
+# and broadcasting the NaN-fenced survivor test over the new bbox axis.
+# The per-record min/max key stack is also returned device-resident, so a
+# decoded-row-group cache can answer *later* query waves with a compare-only
+# launch (refine_minmax_multi) instead of re-decoding.
+
+
+def _keep_from_minmax(mm, valid, qkeys, width):
+    """(8, R) per-record min/max key limbs × (Q, 4, 2) query keys → (Q, R).
+
+    ``mm`` rows: x (min_lo, min_hi, max_lo, max_hi) then y, taken at each
+    record's scan end position. The test is :func:`_refine_jit`'s compare
+    verbatim, broadcast over the query axis — each row is bit-identical to a
+    solo refine of that query.
+    """
+    from repro.kernels.minmax import inf_keys, lex_ge, lex_le
+
+    (neg_lo, neg_hi), (pos_lo, pos_hi) = inf_keys(width)
+    kneg = (jnp.uint32(neg_lo), jnp.uint32(neg_hi))
+    kpos = (jnp.uint32(pos_lo), jnp.uint32(pos_hi))
+    q = qkeys.astype(jnp.uint32)
+    xmn = (mm[0][None], mm[1][None])
+    xmx = (mm[2][None], mm[3][None])
+    ymn = (mm[4][None], mm[5][None])
+    ymx = (mm[6][None], mm[7][None])
+
+    def qb(row, limb):  # one query-bound limb as a (Q, 1) column
+        return q[:, row, limb][:, None]
+
+    return (
+        valid[None]
+        # the bbox intersection test, in key space, per query row
+        & lex_le(*xmn, qb(1, 0), qb(1, 1)) & lex_ge(*xmx, qb(0, 0), qb(0, 1))
+        & lex_le(*ymn, qb(3, 0), qb(3, 1)) & lex_ge(*ymx, qb(2, 0), qb(2, 1))
+        # NaN fence, identical to the solo refine
+        & lex_le(*xmx, *kpos) & lex_ge(*xmn, *kneg)
+        & lex_le(*ymx, *kpos) & lex_ge(*ymn, *kneg)
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def _refine_multi_jit(width: int, use_pallas: bool, interpret: bool):
+    """Jitted fused chain with a bbox-count axis: decode limbs → order keys
+    → segmented min/max → per-record key stack → (Q, R) survivor masks."""
+    from repro.kernels.minmax import float_order_keys, segment_minmax
+
+    def fn(words32, tok_off, nbits, anchor, seg_flag, end_pos, valid, qkeys):
+        if use_pallas:
+            flo, fhi = kernel.decode_stream_limbs(
+                words32, tok_off, nbits, anchor, interpret=interpret)
+        else:
+            flo, fhi = ref.decode_stream_limbs_ref(words32, tok_off, nbits, anchor)
+        klo, khi = float_order_keys(flo, fhi, width)
+        n_blocks = tok_off.shape[0]
+        mnlo, mnhi, mxlo, mxhi = segment_minmax(
+            klo.astype(jnp.int32).reshape(n_blocks, STREAM_BLOCK),
+            khi.astype(jnp.int32).reshape(n_blocks, STREAM_BLOCK),
+            seg_flag, use_pallas=use_pallas, interpret=interpret)
+        ex, ey = end_pos[:, 0], end_pos[:, 1]
+
+        def stat(a, i):
+            return jnp.take(a, i, mode="clip")
+
+        mm = jnp.stack([
+            stat(mnlo, ex), stat(mnhi, ex), stat(mxlo, ex), stat(mxhi, ex),
+            stat(mnlo, ey), stat(mnhi, ey), stat(mxlo, ey), stat(mxhi, ey),
+        ])
+        return flo, fhi, mm, _keep_from_minmax(mm, valid, qkeys, width)
+
+    return jax.jit(fn)
+
+
+@dataclass
+class MultiRefineResult:
+    """Fused multi-query launch output.
+
+    ``lo``/``hi`` are the decoded stream limbs and ``minmax`` the (8,
+    n_rec_pad) per-record min/max key stack — all device-resident and
+    cacheable; ``keep`` is the (Q, n_records) host survivor matrix.
+    """
+
+    lo: object
+    hi: object
+    minmax: object
+    keep: np.ndarray
+
+
+def _pad_query_keys(qkeys) -> tuple[np.ndarray, int]:
+    nq = len(qkeys)
+    qp = _pow2_bucket(max(nq, 1), 4)
+    qpad = np.zeros((qp, 4, 2), np.uint32)
+    qpad[:nq] = qkeys
+    return qpad, qp
+
+
+def decode_refine_stream_multi(stream: PageStream, aux: RefineAux, qkeys,
+                               qvalid, *, use_pallas: bool = True,
+                               interpret: bool | None = None) -> MultiRefineResult:
+    """Fused decode→refine answering Q stacked bbox queries in one launch.
+
+    ``qkeys``/``qvalid`` come from
+    :func:`repro.kernels.minmax.stack_bbox_query_keys`. Each query's
+    survivor row is bit-identical to a solo :func:`decode_refine_stream`
+    over the same stream; invalid (NaN-bound) queries get all-False rows.
+    The query axis is pow2-padded so the compiled shape is shared across
+    nearby wave sizes.
+    """
+    interp = _default_interpret() if interpret is None else interpret
+    nq = len(qkeys)
+    qpad, qp = _pad_query_keys(qkeys)
+    args = _stream_args(stream) + (aux.seg_flag, aux.end_pos, aux.valid, qpad)
+    key = ("refine_multi", stream.words32.shape[0], stream.tok_off.shape[0],
+           aux.end_pos.shape[0], qp, stream.width, use_pallas, interp)
+    fn = _aot(key, _refine_multi_jit(stream.width, use_pallas, interp), args)
+    with obs.span("device.refine_multi_launch", cat="device",
+                  values=stream.n_values, records=aux.n_records,
+                  queries=nq, width=stream.width):
+        lo, hi, mm, keep = fn(*args)
+        keep = np.array(keep[:nq, : aux.n_records])
+    keep[~np.asarray(qvalid, bool)] = False
+    return MultiRefineResult(lo, hi, mm, keep)
+
+
+@functools.lru_cache(maxsize=None)
+def _minmax_keep_jit(width: int):
+    return jax.jit(
+        lambda mm, valid, qkeys: _keep_from_minmax(mm, valid, qkeys, width))
+
+
+def refine_minmax_multi(minmax, valid, qkeys, qvalid, *, width: int,
+                        n_records: int) -> np.ndarray:
+    """Re-test a cached per-record min/max key stack against Q new bboxes.
+
+    The cache-hit half of the serve tier: no decode, no scan — one tiny
+    compare launch over the stored ``(8, n_rec_pad)`` stack from
+    :class:`MultiRefineResult`. Same compare as the fused miss path, so hit
+    and miss survivor rows are bit-identical. Returns (Q, n_records) bool.
+    """
+    nq = len(qkeys)
+    qpad, qp = _pad_query_keys(qkeys)
+    args = (minmax, valid, qpad)
+    key = ("minmax_keep", int(minmax.shape[1]), qp, width)
+    fn = _aot(key, _minmax_keep_jit(width), args)
+    with obs.span("device.refine_cached", cat="device",
+                  records=n_records, queries=nq, width=width):
+        keep = np.array(np.asarray(fn(*args))[:nq, :n_records])
+    keep[~np.asarray(qvalid, bool)] = False
+    return keep
+
+
 _take_limbs_jit = jax.jit(
     lambda lo, hi, idx: (jnp.take(lo, idx, mode="clip"),
                          jnp.take(hi, idx, mode="clip")))

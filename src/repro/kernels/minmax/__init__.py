@@ -10,6 +10,7 @@ from .ref import (
     lex_le,
     minmax_ref,
     segment_minmax_ref,
+    stack_bbox_query_keys,
 )
 
 __all__ = [
@@ -21,6 +22,7 @@ __all__ = [
     "float_order_keys",
     "float_order_key_np",
     "bbox_query_keys",
+    "stack_bbox_query_keys",
     "inf_keys",
     "lex_gt",
     "lex_le",

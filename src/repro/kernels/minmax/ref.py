@@ -210,6 +210,25 @@ def bbox_query_keys(bbox, dtype: np.dtype) -> np.ndarray | None:
     return np.array(keys, dtype=np.uint32)
 
 
+def stack_bbox_query_keys(bboxes, dtype: np.dtype) -> tuple[np.ndarray, np.ndarray]:
+    """Stack per-query bbox key limbs for a multi-query refine launch.
+
+    Returns ``(keys, valid)``: ``keys`` is ``(Q, 4, 2)`` uint32 (row q is
+    :func:`bbox_query_keys` of ``bboxes[q]``), ``valid`` is ``(Q,)`` bool.
+    A NaN-bound bbox gets a zero key row and ``valid[q] = False`` — the host
+    keeps no record for it, so the multi-query refine masks that row out
+    after the launch instead of fencing it in key space.
+    """
+    keys = np.zeros((len(bboxes), 4, 2), np.uint32)
+    valid = np.zeros(len(bboxes), bool)
+    for q, bbox in enumerate(bboxes):
+        k = bbox_query_keys(bbox, dtype)
+        if k is not None:
+            keys[q] = k
+            valid[q] = True
+    return keys, valid
+
+
 def inf_keys(width: int) -> tuple[tuple[int, int], tuple[int, int]]:
     """Order keys of (-inf, +inf) as ((lo, hi), (lo, hi)) for NaN fencing."""
     dtype = np.float32 if width == 32 else np.float64

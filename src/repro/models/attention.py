@@ -112,6 +112,16 @@ def _sdpa(q, k, v, *, causal: bool, q_pos=None, k_valid_len=None, impl: str = "r
     return out.reshape(b, s, hq, v.shape[-1])  # v dim may differ from qk (MLA)
 
 
+def _update_slots(cache_arr, new, pos):
+    """Per-slot cache write: ``new[b]`` lands in ``cache_arr[b]`` at row
+    offset ``pos[b]`` along axis 1 (continuous batching, where every batch
+    slot sits at its own decode position)."""
+    return jax.vmap(
+        lambda c, u, p: jax.lax.dynamic_update_slice(
+            c, u.astype(c.dtype), (p,) + (0,) * (c.ndim - 1))
+    )(cache_arr, new, pos)
+
+
 # ----------------------------------------------------------------------- GQA
 def init_gqa(rng, cfg, dtype) -> dict:
     d, hq, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
@@ -149,6 +159,18 @@ def gqa_forward(cfg, p, x, positions, *, causal=True, cache=None, cache_pos=None
         k = apply_rope(k, positions, cfg.rope_theta)
     new_cache = None
     if cache is not None:
+        if jnp.ndim(cache_pos) != 0:
+            # per-slot positions: each slot writes K/V at its own offset and
+            # masks its own valid length; positions must already be (B, S)
+            kc = _update_slots(cache["k"], k, cache_pos)
+            vc = _update_slots(cache["v"], v, cache_pos)
+            out = _sdpa(
+                q, kc.astype(x.dtype), vc.astype(x.dtype), causal=True,
+                q_pos=positions, k_valid_len=(cache_pos + s)[:, None, None],
+                impl="ref",
+            )
+            return out.reshape(b, s, hq * hd) @ p["wo"].astype(x.dtype), \
+                {"k": kc, "v": vc}
         kc = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, cache_pos, 0, 0))
         vc = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, cache_pos, 0, 0))
         new_cache = {"k": kc, "v": vc}
@@ -235,6 +257,16 @@ def mla_forward(cfg, p, x, positions, *, cache=None, cache_pos=None):
     if cache is None:
         out = _mla_attend(cfg, p, q_nope, q_rope, c_kv, k_rope)
         return out, None
+    if jnp.ndim(cache_pos) != 0:
+        # per-slot positions (continuous batching): see gqa_forward
+        cc = _update_slots(cache["c_kv"], c_kv, cache_pos)
+        cr = _update_slots(cache["k_rope"], k_rope, cache_pos)
+        s = x.shape[1]
+        out = _mla_attend(
+            cfg, p, q_nope, q_rope, cc, cr,
+            q_pos=positions, k_valid_len=(cache_pos + s)[:, None, None],
+        )
+        return out, {"c_kv": cc, "k_rope": cr}
     cc = jax.lax.dynamic_update_slice(
         cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), (0, cache_pos, 0)
     )

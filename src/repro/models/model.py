@@ -363,7 +363,11 @@ def forward_with_cache(cfg: ModelConfig, params: dict, batch: dict, cache: dict)
         vis = batch["patches"].astype(adt) @ params["frontend_adapter"].astype(adt)
         x = jnp.concatenate([vis, x], axis=1)
         s = x.shape[1]
-    positions = pos0 + jnp.arange(s)
+    if jnp.ndim(pos0) == 0:
+        positions = pos0 + jnp.arange(s)
+    else:
+        # per-slot positions (continuous batching): (B, S), one row per slot
+        positions = pos0[:, None] + jnp.arange(s)[None, :]
     shared = params.get("shared_attn")
     new_cache = dict(cache)
 

@@ -48,6 +48,7 @@ __all__ = [
     "current_span", "enabled", "enable", "disable", "trace", "get_tracer",
     "get_registry", "span", "instant", "count", "gauge", "observe", "timed",
     "submit", "fold_read_stats", "fold_source_stats", "snapshot",
+    "percentiles",
 ]
 
 _enabled: bool = False
@@ -189,6 +190,18 @@ def fold_source_stats(stats, prefix: str = "io") -> None:
     deltas) into cumulative counters."""
     if _enabled:
         _registry.fold_source_stats(stats, prefix)
+
+
+def percentiles(name: str, qs=DEFAULT_QUANTILES) -> dict:
+    """Interpolated percentiles of a named histogram (``{"p50": ..., ...}``);
+    empty when the histogram has no observations or telemetry was never
+    enabled. The serve tier reads its p50/p99 from here."""
+    if _registry is None:
+        return {}
+    h = _registry.histogram(name)
+    if h.count == 0:
+        return {}
+    return h.percentiles(qs)
 
 
 def snapshot() -> dict:

@@ -1,11 +1,24 @@
-"""Batched serving: continuous-batching-lite request scheduler.
+"""Batched serving: continuous-batching request scheduler.
 
 Requests (prompts) queue up; the scheduler packs up to ``max_batch`` slots,
 prefills new requests into their slots, then decodes all active slots
 together one token/step. A slot frees when its request emits EOS or hits
 ``max_new_tokens``, and is refilled from the queue on the next cycle —
 continuous batching with a fixed-capacity cache (static shapes: one compiled
-prefill + one compiled decode).
+prefill per wave length + one compiled decode).
+
+The cache position is a per-slot vector (``cache["pos"]: (max_batch,)``), so
+an admission wave prefills into *free* slots only: in-flight slots keep their
+KV rows and decode positions untouched (the admission wave runs on a fresh
+zero cache and only the admitted slots' rows are merged back). Attention
+families mask per slot, so right-padding an uneven wave cannot leak into the
+generated tokens; SSM state carries a small right-pad approximation for
+uneven waves (positionless recurrence — noted in DESIGN.md).
+
+Latency accounting uses ``time.perf_counter`` (monotonic, matching
+``repro.obs``) and folds TTFT / total latency into the ``serve.ttft_s`` /
+``serve.latency_s`` obs histograms, so the serve tier reports percentiles
+the same way scans do.
 
 For the assignment's decode shapes, ``make_serve_step`` in
 repro.train.train_loop is the distributed version of the same step; this
@@ -21,6 +34,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.models.model import build_model
 
 
@@ -31,6 +45,7 @@ class Request:
     max_new_tokens: int = 32
     out_tokens: list = field(default_factory=list)
     done: bool = False
+    # monotonic (perf_counter) timestamps — durations only, not wall time
     t_submit: float = 0.0
     t_first: float = 0.0
     t_done: float = 0.0
@@ -47,22 +62,34 @@ class BatchedServer:
         self.eos_id = eos_id
 
         # per-slot caches (batch dim = max_batch); positions per slot
-        self.cache = self.model.init_cache(max_batch, max_len)
+        self.cache = self._fresh_cache()
         self.slot_req: list[Request | None] = [None] * max_batch
         self.queue: list[Request] = []
+        self._next_rid = 0
         self._decode = jax.jit(self.model.decode_step, donate_argnums=(2,))
+
+    def _fresh_cache(self) -> dict:
+        cache = self.model.init_cache(self.max_batch, self.max_len)
+        cache["pos"] = jnp.zeros((self.max_batch,), jnp.int32)
+        return cache
 
     # ------------------------------------------------------------------- API
     def submit(self, prompt, max_new_tokens=32, rid=None) -> Request:
-        req = Request(rid=rid if rid is not None else len(self.queue),
-                      prompt=np.asarray(prompt, np.int32),
-                      max_new_tokens=max_new_tokens, t_submit=time.time())
+        if rid is None:
+            rid = self._next_rid
+        # keep the counter ahead of explicit rids so later defaults never
+        # collide with them (or with requests already drained from the queue)
+        self._next_rid = max(self._next_rid, rid + 1)
+        req = Request(rid=rid, prompt=np.asarray(prompt, np.int32),
+                      max_new_tokens=max_new_tokens,
+                      t_submit=time.perf_counter())
         self.queue.append(req)
         return req
 
     def run(self, max_steps: int = 10_000) -> list[Request]:
         """Run until queue + slots drain. Returns completed requests."""
         completed: list[Request] = []
+        seen_rids: set[int] = set()
         steps = 0
         while (self.queue or any(self.slot_req)) and steps < max_steps:
             self._fill_slots()
@@ -70,21 +97,39 @@ class BatchedServer:
             steps += 1
             for i, req in enumerate(self.slot_req):
                 if req is not None and req.done:
+                    assert req.rid not in seen_rids, \
+                        f"duplicate request id {req.rid}"
+                    seen_rids.add(req.rid)
                     completed.append(req)
                     self.slot_req[i] = None
         return completed
 
     # -------------------------------------------------------------- internals
-    def _fill_slots(self):
-        """Admit a wave of queued requests when the batch is idle.
+    def _merge_admitted(self, live: dict, fresh: dict, mask: np.ndarray) -> dict:
+        """Take admitted slots' rows from ``fresh``, everything else from
+        ``live`` — in-flight slots' KV rows and positions are untouched."""
+        m = jnp.asarray(mask)
+        out = dict(live)
+        out["pos"] = jnp.where(m, fresh["pos"], live["pos"])
+        for key in ("layers", "sites", "cross"):
+            if key not in live:
+                continue
+            # leading axis is the layer/site stack; batch is axis 1
+            out[key] = jax.tree.map(
+                lambda a, b: jnp.where(
+                    m.reshape((1, self.max_batch) + (1,) * (a.ndim - 2)), b, a),
+                live[key], fresh[key],
+            )
+        return out
 
-        Wave batching: all slots share the cache position scalar, so a new
-        wave is admitted only when every slot is free (true continuous
-        batching needs per-slot positions — noted as a framework extension;
-        the distributed serve_step itself is position-vector-ready since
-        apply_rope accepts (B, S) positions)."""
-        if any(r is not None for r in self.slot_req):
-            return
+    def _fill_slots(self):
+        """Admit queued requests into free slots while others keep decoding.
+
+        The admission wave prefills on a *fresh* zero cache (so stale KV in
+        recycled slots can't bleed in), then only the admitted slots' cache
+        rows and positions are merged into the live cache. Per-slot
+        positions make the merged batch decode correctly even though slots
+        sit at different sequence offsets."""
         free = [i for i, r in enumerate(self.slot_req) if r is None]
         if not free or not self.queue:
             return
@@ -95,27 +140,30 @@ class BatchedServer:
             req = self.queue.pop(0)
             self.slot_req[i] = req
             admitted.append((i, req))
-        if not admitted:
-            return
-        # prefill each admitted slot: run a forward_with_cache over the
-        # prompt for the whole batch but mask writes to other slots by
-        # zero-length... static shapes require a uniform prefill, so we
-        # prefill per admission wave with right-padded prompts and reset pos.
         maxp = max(len(r.prompt) for _, r in admitted)
         toks = np.zeros((self.max_batch, maxp), np.int32)
+        lens = np.zeros(self.max_batch, np.int32)
+        mask = np.zeros(self.max_batch, bool)
         for i, req in admitted:
             toks[i, : len(req.prompt)] = req.prompt
-        cache = jax.tree.map(lambda a: a, self.cache)
-        cache["pos"] = jnp.zeros((), jnp.int32)
-        logits, cache = self.model.forward_with_cache(
-            self.params, {"tokens": jnp.asarray(toks)}, cache
+            lens[i] = len(req.prompt)
+            mask[i] = True
+        fresh = self._fresh_cache()
+        logits, fresh = self.model.forward_with_cache(
+            self.params, {"tokens": jnp.asarray(toks)}, fresh
         )
-        self.cache = cache
-        last = np.asarray(jnp.argmax(logits[:, -1], axis=-1)).astype(np.int32)
-        now = time.time()
+        # the wave is right-padded: each admitted slot's position is its own
+        # prompt length, so decode overwrites the pad KV instead of appending
+        fresh["pos"] = jnp.asarray(lens)
+        self.cache = self._merge_admitted(self.cache, fresh, mask)
+        logits = np.asarray(logits)
+        now = time.perf_counter()
         for i, req in admitted:
-            req.out_tokens = [int(last[i])]
+            # first token comes from the last *real* prompt position
+            nxt = int(np.argmax(logits[i, len(req.prompt) - 1]))
+            req.out_tokens = [nxt]
             req.t_first = now
+            obs.observe("serve.ttft_s", req.t_first - req.t_submit)
 
     def _decode_once(self):
         active = [(i, r) for i, r in enumerate(self.slot_req) if r is not None]
@@ -126,11 +174,12 @@ class BatchedServer:
             cur[i, 0] = req.out_tokens[-1] if req.out_tokens else self.eos_id
         logits, self.cache = self._decode(self.params, jnp.asarray(cur), self.cache)
         nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1)).astype(np.int32)
-        pos = int(self.cache["pos"])
+        pos = np.asarray(self.cache["pos"])
         for i, req in active:
             tok = int(nxt[i])
             req.out_tokens.append(tok)
             if tok == self.eos_id or len(req.out_tokens) >= req.max_new_tokens \
-               or pos >= self.max_len - 1:
+               or int(pos[i]) >= self.max_len - 1:
                 req.done = True
-                req.t_done = time.time()
+                req.t_done = time.perf_counter()
+                obs.observe("serve.latency_s", req.t_done - req.t_submit)

@@ -1,12 +1,22 @@
 """Serving scheduler + cache spec unit tests."""
 
+import time
+
 import jax
 import numpy as np
 import pytest
 
+from repro import obs
 from repro.configs import get_config
 from repro.models.model import build_model
 from repro.serve.scheduler import BatchedServer
+
+
+def _solo_tokens(cfg, params, prompt, max_new_tokens, max_len=64):
+    """Reference output: the request alone in a max_batch=1 server."""
+    srv = BatchedServer(cfg, params, max_batch=1, max_len=max_len)
+    srv.submit(prompt, max_new_tokens=max_new_tokens)
+    return srv.run()[0].out_tokens
 
 
 def test_scheduler_drains_queue(rng):
@@ -22,6 +32,87 @@ def test_scheduler_drains_queue(rng):
     for r in done:
         assert 1 <= len(r.out_tokens) <= 6
         assert r.t_first >= r.t_submit
+
+
+def test_admission_wave_preserves_inflight_slots(rng):
+    """Admitting wave 2 mid-decode must not clobber wave 1's cache rows.
+
+    Request A decodes a few tokens alone, then B is admitted into the free
+    slot; A's already-emitted prefix must stand and both outputs must match
+    the same request run with no co-tenant (regression: admission used to
+    reset ``cache["pos"]`` and the KV rows for the whole batch)."""
+    cfg = get_config("internlm2-1.8b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    pa = rng.integers(3, cfg.vocab, 9).astype(np.int32)
+    pb = rng.integers(3, cfg.vocab, 5).astype(np.int32)
+
+    def alone(prompt, n):
+        srv = BatchedServer(cfg, params, max_batch=2, max_len=64)
+        srv.submit(prompt, max_new_tokens=n)
+        return srv.run()[0].out_tokens
+
+    srv = BatchedServer(cfg, params, max_batch=2, max_len=64)
+    a = srv.submit(pa, max_new_tokens=10)
+    srv._fill_slots()
+    srv._decode_once()
+    srv._decode_once()                      # A is mid-generation
+    mid = list(a.out_tokens)
+    assert len(mid) == 3
+    b = srv.submit(pb, max_new_tokens=6)
+    done = srv.run()
+    assert {r.rid for r in done} == {a.rid, b.rid}
+    assert a.out_tokens[: len(mid)] == mid
+    assert a.out_tokens == alone(pa, 10)
+    assert b.out_tokens == alone(pb, 6)
+
+
+def test_rids_unique_after_queue_drains(rng):
+    """Default rids must keep increasing across drain/refill cycles
+    (regression: ``rid = len(self.queue)`` collided after a drain)."""
+    cfg = get_config("internlm2-1.8b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    srv = BatchedServer(cfg, params, max_batch=2, max_len=64)
+    prompts = [rng.integers(3, cfg.vocab, 5).astype(np.int32) for _ in range(4)]
+    first = [srv.submit(p, max_new_tokens=3) for p in prompts[:2]]
+    done = srv.run()                        # queue drains to empty
+    second = [srv.submit(p, max_new_tokens=3) for p in prompts[2:]]
+    done += srv.run()
+    rids = [r.rid for r in first + second]
+    assert len(set(rids)) == 4, rids
+    assert {r.rid for r in done} == set(rids)
+
+
+def test_scheduler_uses_monotonic_clock_and_obs(monkeypatch, rng):
+    """Timestamps come from perf_counter (never wall-clock ``time.time``),
+    and TTFT / total latency land in the obs histograms."""
+
+    class _NoWallClock:
+        perf_counter = staticmethod(time.perf_counter)
+
+        @staticmethod
+        def time():
+            raise AssertionError("scheduler must not read wall-clock time")
+
+    monkeypatch.setattr("repro.serve.scheduler.time", _NoWallClock)
+    cfg = get_config("internlm2-1.8b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    srv = BatchedServer(cfg, params, max_batch=2, max_len=64)
+    obs.enable()
+    try:
+        for i in range(3):
+            srv.submit(rng.integers(3, cfg.vocab, 4 + i), max_new_tokens=3)
+        done = srv.run()
+    finally:
+        obs.disable()
+    assert len(done) == 3
+    for r in done:
+        assert r.t_done >= r.t_first >= r.t_submit > 0.0
+    assert obs.get_registry().histogram("serve.ttft_s").count == 3
+    assert obs.get_registry().histogram("serve.latency_s").count == 3
+    assert "p50" in obs.percentiles("serve.latency_s")
 
 
 def test_scheduler_greedy_matches_manual_decode(rng):
