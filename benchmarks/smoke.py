@@ -17,7 +17,10 @@ correctness-plane trajectories in CI, not speedups. Also recorded:
 ``file_bytes``, ``raw_coord_bytes``, ``n_records``, ``n_values``, plus the
 sharded-dataset trajectory: ``dataset_write_s``, ``dataset_scan_s`` (async
 full scan over ``dataset_n_shards`` shards), ``dataset_scan_bbox_s`` and its
-pruning ratio ``dataset_bbox_bytes_read``/``dataset_bytes_total``, plus the
+pruning ratio ``dataset_bbox_bytes_read``/``dataset_bytes_total``, the
+crash-safe catalog trajectory: ``catalog_commit_s`` (atomic snapshot commit
+latency) and ``compact_s`` with ``compact_shards_before`` /
+``compact_shards_after`` (one background-compaction cycle), plus the
 fault-tolerant remote path: ``remote_scan_s`` (full read through a
 ``RemoteRangeSource`` over an in-process range-GET server, ``cold_cache``
 vs ``warm_cache`` block cache). Timings are best-of-N to shrink scheduler
@@ -44,7 +47,12 @@ import numpy as np
 
 from repro.core.reader import SpatialParquetReader
 from repro.core.writer import write_file
-from repro.dataset import SpatialDatasetScanner, write_dataset
+from repro.dataset import (
+    Catalog,
+    Compactor,
+    SpatialDatasetScanner,
+    write_dataset,
+)
 from repro.io import InProcessRangeServer, RemoteRangeSource
 
 from .common import SCALE_1, make_dataset, tmppath
@@ -153,6 +161,18 @@ def run(scale: float = 0.25, dataset: str = "PT", repeats: int = 3,
         _, _, dstats = sc.scan(bbox=bbox)
         trace_info = (_traced_scan_check(sc, bbox, trace)
                       if trace is not None else None)
+
+        # crash-safe catalog: metadata-only snapshot commit latency, then one
+        # background-compaction cycle (merges the bench lake back to SFC
+        # order; single run — a second cycle would be a no-op)
+        cat = Catalog.open(droot)
+        catalog_commit_s = bench(
+            "catalog_commit_s",
+            lambda: cat.commit_manifest(cat.head_snapshot().manifest))
+        compact_shards_before = cat.head_snapshot().manifest.n_shards
+        compactor = Compactor(cat, target_records=1 << 62)
+        compact_s = _timed(compactor.run_once)
+        compact_shards_after = cat.head_snapshot().manifest.n_shards
     finally:
         if os.path.exists(path):
             os.unlink(path)
@@ -177,6 +197,10 @@ def run(scale: float = 0.25, dataset: str = "PT", repeats: int = 3,
         "dataset_bbox_bytes_read": dstats.bytes_read,
         "dataset_bytes_total": dstats.bytes_total,
         "dataset_bbox_shards_read": dstats.shards_read,
+        "catalog_commit_s": round(catalog_commit_s, 6),
+        "compact_s": round(compact_s, 6),
+        "compact_shards_before": compact_shards_before,
+        "compact_shards_after": compact_shards_after,
         "remote_scan_s": {
             "cold_cache": round(remote_scan_cold_s, 6),
             "warm_cache": round(remote_scan_warm_s, 6),

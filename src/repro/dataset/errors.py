@@ -22,6 +22,15 @@ class DatasetError(RuntimeError):
     """A dataset catalog problem: missing/malformed/partial manifest."""
 
 
+class CommitConflict(DatasetError):
+    """A snapshot commit lost the generation race.
+
+    The commit's target generation was taken by another writer between
+    ``begin()`` and the rename; the loser's staged files are aborted (or
+    left for GC) and the caller decides whether to rebase and retry.
+    """
+
+
 class ShardReadError(RuntimeError):
     """One shard of a dataset failed to read (cause chained).
 

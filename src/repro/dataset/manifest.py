@@ -38,9 +38,10 @@ class ShardInfo:
     n_pages: int  # x/y page pairs (per-page index size)
     data_bytes: int  # stored bytes of every blob in the shard
     file_bytes: int  # on-disk size incl. magic + footer
+    crc32c: int | None = None  # whole-file CRC-32C (catalog commits set it)
 
     def to_dict(self) -> dict:
-        return {
+        d = {
             "path": self.path,
             "mbr": [float(v) for v in self.mbr],
             "n_records": int(self.n_records),
@@ -49,6 +50,9 @@ class ShardInfo:
             "data_bytes": int(self.data_bytes),
             "file_bytes": int(self.file_bytes),
         }
+        if self.crc32c is not None:
+            d["crc32c"] = int(self.crc32c)
+        return d
 
     @classmethod
     def from_dict(cls, d: dict) -> "ShardInfo":
@@ -60,6 +64,7 @@ class ShardInfo:
             n_pages=d["n_pages"],
             data_bytes=d["data_bytes"],
             file_bytes=d["file_bytes"],
+            crc32c=d.get("crc32c"),
         )
 
     def validate(self, index: int, where: str) -> None:
@@ -83,6 +88,11 @@ class ShardInfo:
             if not isinstance(v, int) or isinstance(v, bool) or v < 0:
                 raise DatasetError(
                     f"{who}: {k!r} must be a non-negative integer, got {v!r}")
+        if self.crc32c is not None and (
+                not isinstance(self.crc32c, int) or isinstance(self.crc32c, bool)
+                or not (0 <= self.crc32c < 1 << 32)):
+            raise DatasetError(
+                f"{who}: 'crc32c' must be a uint32, got {self.crc32c!r}")
 
 
 @dataclass
@@ -134,41 +144,34 @@ class DatasetManifest:
             "shards": [s.to_dict() for s in self.shards],
         }
 
-    def save(self, root) -> str:
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict(), indent=1) + "\n"
+
+    def save(self, root, *, fsync: bool = True) -> str:
+        """Write ``manifest.json`` atomically (temp + fsync + rename).
+
+        A crashed save can therefore never leave a torn manifest — only the
+        complete old or complete new one (plus an orphan temp file the
+        catalog GC removes).
+        """
+        from repro.io.durable import write_atomic
+
         path = os.path.join(str(root), MANIFEST_NAME)
-        with open(path, "w") as fh:
-            json.dump(self.to_dict(), fh, indent=1)
-            fh.write("\n")
+        write_atomic(path, self.to_json().encode(), fsync=fsync)
         return path
 
     @classmethod
-    def load(cls, root) -> "DatasetManifest":
-        """Load and validate from a dataset directory (or a manifest.json
-        path directly).
+    def from_dict(cls, d, where: str = "<manifest>") -> "DatasetManifest":
+        """Validate a parsed manifest object (shared by ``manifest.json``
+        and the catalog's snapshot files, which embed the same structure).
 
-        Any way the catalog can be wrong — missing file, truncated or
-        invalid JSON (a partially-written manifest), wrong ``format`` tag,
-        too-new version, missing keys, malformed shard entries — raises an
-        attributed :class:`~repro.dataset.errors.DatasetError` naming the
-        path and the offending field, never a raw ``KeyError`` /
-        ``JSONDecodeError`` / ``TypeError``.
+        Any way the catalog can be wrong — wrong ``format`` tag, too-new
+        version, missing keys, malformed shard entries, totals that do not
+        add up — raises an attributed
+        :class:`~repro.dataset.errors.DatasetError` naming ``where`` and the
+        offending field, never a raw ``KeyError`` / ``TypeError``.
         """
-        path = str(root)
-        if os.path.isdir(path):
-            path = os.path.join(path, MANIFEST_NAME)
-        try:
-            with open(path) as fh:
-                d = json.load(fh)
-        except FileNotFoundError:
-            raise DatasetError(
-                f"{path}: no manifest found (not a dataset directory?)"
-            ) from None
-        except json.JSONDecodeError as exc:
-            raise DatasetError(
-                f"{path}: manifest is not valid JSON "
-                f"(truncated or partially written?): {exc}") from exc
-        except OSError as exc:
-            raise DatasetError(f"{path}: cannot read manifest: {exc}") from exc
+        path = where
         if not isinstance(d, dict):
             raise DatasetError(
                 f"{path}: manifest must be a JSON object, got "
@@ -227,6 +230,34 @@ class DatasetManifest:
                     f"{path}: declared {key}={declared} but shard entries "
                     f"give {actual} (partial write?)")
         return manifest
+
+    @classmethod
+    def load(cls, root) -> "DatasetManifest":
+        """Load and validate from a dataset directory (or a manifest.json
+        path directly); see :meth:`from_dict` for the validation contract.
+
+        Note: for catalog-managed datasets ``manifest.json`` is an
+        atomically-maintained *mirror* of the newest committed snapshot —
+        generation-aware readers should go through
+        :class:`~repro.dataset.catalog.Catalog` instead.
+        """
+        path = str(root)
+        if os.path.isdir(path):
+            path = os.path.join(path, MANIFEST_NAME)
+        try:
+            with open(path) as fh:
+                d = json.load(fh)
+        except FileNotFoundError:
+            raise DatasetError(
+                f"{path}: no manifest found (not a dataset directory?)"
+            ) from None
+        except json.JSONDecodeError as exc:
+            raise DatasetError(
+                f"{path}: manifest is not valid JSON "
+                f"(truncated or partially written?): {exc}") from exc
+        except OSError as exc:
+            raise DatasetError(f"{path}: cannot read manifest: {exc}") from exc
+        return cls.from_dict(d, where=path)
 
 
 def is_dataset(path) -> bool:

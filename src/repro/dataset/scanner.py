@@ -42,6 +42,7 @@ from repro.core.reader import ReadStats, SpatialParquetReader
 from repro.core.writer import concat_columns
 from repro.io.source import LocalFileSource, SourceStats
 
+from .catalog import Catalog
 from .errors import ShardFailure, ShardReadError
 from .index import DatasetIndex
 from .manifest import DatasetManifest, shard_path
@@ -67,15 +68,33 @@ class SpatialDatasetScanner:
     :class:`~repro.io.source.ByteRangeSource` — the hook that points a scan
     at remote storage (e.g. ``lambda p: RemoteRangeSource(server_for(p))``)
     without the scanner knowing anything about transports.
+
+    Snapshot isolation: every scan **pins** one committed catalog generation
+    for its whole duration, so a concurrent compaction / rewrite commit (and
+    the GC that follows it) can neither change nor delete what the scan is
+    reading — results are bit-identical to running against that generation
+    alone. By default each scan pins the newest generation at its start;
+    ``pin_generation=N`` pins generation ``N`` for the scanner's lifetime
+    instead (release it with :meth:`close`). Legacy manifest-only
+    directories behave as generation 0.
     """
 
     def __init__(self, root, *, max_workers: int = 4,
                  coalesce_max_gap: int = 1 << 16, prefetch_row_groups: int = 1,
                  on_error: str = "raise", shard_retries: int = 1,
-                 source_factory=None, verify_checksums: bool = True):
+                 source_factory=None, verify_checksums: bool = True,
+                 pin_generation: int | None = None):
         self.root = str(root)
-        self.manifest = DatasetManifest.load(root)
+        self.catalog = Catalog.open(root)
+        self._pin = (self.catalog.pin(pin_generation)
+                     if pin_generation is not None else None)
+        snap = (self._pin.snapshot if self._pin is not None
+                else self.catalog.head_snapshot())
+        self.generation = snap.generation
+        self.manifest = snap.manifest
         self.index = DatasetIndex(self.manifest)
+        self._views: dict[int, tuple[DatasetManifest, DatasetIndex]] = {
+            self.generation: (self.manifest, self.index)}
         self.max_workers = max(1, int(max_workers))
         self.coalesce_max_gap = int(coalesce_max_gap)
         self.prefetch_row_groups = int(prefetch_row_groups)
@@ -88,6 +107,52 @@ class SpatialDatasetScanner:
         self.verify_checksums = bool(verify_checksums)
         self.extra_schema = dict(self.manifest.extra_schema)
         self.n_records = self.manifest.n_records
+
+    # ----------------------------------------------------------- generations
+    def refresh(self) -> int:
+        """Adopt the newest committed generation (no-op while pinned).
+
+        Returns the generation the scanner now serves; the serve tier calls
+        this between admission waves so a compaction commit invalidates its
+        caches instead of silently serving a stale (or GC'd) layout.
+        """
+        if self._pin is not None:
+            return self.generation
+        snap = self.catalog.head_snapshot()
+        if snap.generation != self.generation:
+            manifest = snap.manifest
+            index = DatasetIndex(manifest)
+            self._views[snap.generation] = (manifest, index)
+            self.generation = snap.generation
+            self.manifest = manifest
+            self.index = index
+            self.extra_schema = dict(manifest.extra_schema)
+            self.n_records = manifest.n_records
+        return self.generation
+
+    def _view(self, generation: int) -> tuple[DatasetManifest, DatasetIndex]:
+        """(manifest, index) for one pinned generation (memoized)."""
+        view = self._views.get(generation)
+        if view is None:
+            manifest = self.catalog.load_snapshot(generation).manifest
+            view = (manifest, DatasetIndex(manifest))
+            if len(self._views) > 8:  # old generations: drop the memo only
+                self._views.clear()
+                self._views[self.generation] = (self.manifest, self.index)
+            self._views[generation] = view
+        return view
+
+    def close(self) -> None:
+        """Release the lifetime pin (``pin_generation`` mode); idempotent."""
+        if self._pin is not None:
+            self._pin.release()
+            self._pin = None
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
 
     # ------------------------------------------------------------- internals
     def _open_source(self, path: str):
@@ -132,9 +197,13 @@ class SpatialDatasetScanner:
             exc.spqf_source_stats = src.stats.copy()
             raise
 
-    def _read_shard(self, shard_i: int, bbox, columns, refine, coalesce,
-                    device, keep_on_device):
+    def _read_shard(self, manifest: DatasetManifest, shard_i: int, bbox,
+                    columns, refine, coalesce, device, keep_on_device):
         """Read one shard under the scanner's error policy.
+
+        ``manifest`` is the scan's pinned snapshot — passed explicitly so a
+        concurrent :meth:`refresh` can never mix two generations' shard
+        lists inside one scan.
 
         Returns ``(result, extra_attempts, failure, failed_stats)`` where
         exactly one of ``result`` / ``failure`` is set and ``failed_stats``
@@ -144,7 +213,7 @@ class SpatialDatasetScanner:
         (after exhausting ``shard_retries``), always as an attributed
         :class:`ShardReadError`.
         """
-        path = shard_path(self.root, self.manifest.shards[shard_i])
+        path = shard_path(self.root, manifest.shards[shard_i])
         retries = 0 if self.on_error == "raise" else self.shard_retries
         last: Exception | None = None
         failed = SourceStats()
@@ -224,12 +293,33 @@ class SpatialDatasetScanner:
 
     def _scan_impl(self, bbox, columns, refine, parallel, coalesce, device,
                    keep_on_device):
-        hit = self.index.query(bbox)
+        # every scan holds a pin on its generation for its whole duration:
+        # a compaction commit + GC racing the scan cannot delete the shard
+        # files this scan is reading (lifetime-pinned scanners reuse theirs)
+        generation = self.generation
+        pin = self._pin
+        release = pin is None
+        if release:
+            pin = self.catalog.pin(generation)
+        else:
+            generation = pin.generation
+        try:
+            manifest, index = self._view(generation)
+            return self._scan_pinned(
+                manifest, index, bbox, columns, refine, parallel, coalesce,
+                device, keep_on_device)
+        finally:
+            if release:
+                pin.release()
+
+    def _scan_pinned(self, manifest, index, bbox, columns, refine, parallel,
+                     coalesce, device, keep_on_device):
+        hit = index.query(bbox)
         hit_set = set(int(i) for i in hit)
-        stats = ReadStats(shards_total=len(self.index), shards_read=len(hit))
+        stats = ReadStats(shards_total=len(index), shards_read=len(hit))
         # pruned shards still count toward the totals (read side stays zero)
         pruned_bytes = 0
-        for i, shard in enumerate(self.manifest.shards):
+        for i, shard in enumerate(manifest.shards):
             if i not in hit_set:
                 stats.pages_total += shard.n_pages
                 stats.bytes_total += shard.data_bytes
@@ -241,16 +331,17 @@ class SpatialDatasetScanner:
         elif parallel and self.max_workers > 1 and len(hit) > 1:
             with ThreadPoolExecutor(max_workers=self.max_workers) as pool:
                 futures = [
-                    obs.submit(pool, self._read_shard, int(i), bbox, columns,
-                               refine, coalesce, device, keep_on_device)
+                    obs.submit(pool, self._read_shard, manifest, int(i), bbox,
+                               columns, refine, coalesce, device,
+                               keep_on_device)
                     for i in hit
                 ]
                 # gather in submission (manifest) order: deterministic output
                 outcomes = [f.result() for f in futures]
         else:
             outcomes = [
-                self._read_shard(int(i), bbox, columns, refine, coalesce,
-                                 device, keep_on_device)
+                self._read_shard(manifest, int(i), bbox, columns, refine,
+                                 coalesce, device, keep_on_device)
                 for i in hit
             ]
 

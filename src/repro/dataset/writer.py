@@ -14,6 +14,18 @@ Two APIs, mirroring :mod:`repro.core.writer`:
 * :func:`write_dataset` — one-shot convenience, returns the manifest.
 * :class:`SpatialDatasetWriter` — buffering writer with ``write_columns`` /
   ``write_geometries`` and a closing partition+flush, for streaming callers.
+
+Writes are **transactional**: shard files are staged through a
+:class:`~repro.dataset.catalog.CommitTx` and published by an atomic snapshot
+commit (temp file + fsync + rename — see :mod:`repro.dataset.catalog`).
+An exception mid-write aborts the transaction and deletes the partial shard
+files it staged; a simulated crash
+(:class:`~repro.io.faults.InjectedCrash`) leaves them as orphans for the
+catalog GC, exactly like a real kill. Either way the directory always
+reopens as a complete generation — the previous one until the commit
+rename, the new one after it. Writing into a directory that already holds a
+dataset layers a *new generation* on top (generation-qualified shard names,
+never overwriting live files) instead of clobbering it.
 """
 
 from __future__ import annotations
@@ -23,15 +35,14 @@ import os
 import numpy as np
 
 from repro.core.columnar import GeometryColumns, shred
-from repro.core.reader import footer_data_bytes, footer_page_count
 from repro.core.sfc import sort_keys
 from repro.core.writer import (
     concat_columns,
     permute_records,
     record_centroids,
-    write_file,
 )
 
+from .catalog import Catalog
 from .manifest import DatasetManifest, ShardInfo
 
 SHARD_NAME = "shard-{:05d}.spqf"
@@ -71,6 +82,7 @@ class SpatialDatasetWriter:
         page_values: int = 131072,
         row_group_records: int = 1 << 20,
         extra_schema: dict[str, str] | None = None,
+        fsync: bool = True,
     ):
         if n_shards < 1:
             raise ValueError("n_shards must be >= 1")
@@ -78,6 +90,7 @@ class SpatialDatasetWriter:
         self.n_shards = int(n_shards)
         self.sort = sort
         self.sfc_order = int(sfc_order)
+        self.fsync = bool(fsync)
         self.extra_schema = dict(extra_schema or {})
         self._file_kwargs = dict(
             encoding=encoding,
@@ -89,6 +102,7 @@ class SpatialDatasetWriter:
         self._cols_list: list[GeometryColumns] = []
         self._extras: dict[str, list[np.ndarray]] = {k: [] for k in self.extra_schema}
         self._manifest: DatasetManifest | None = None
+        self.generation: int | None = None  # set by close()
 
     # ------------------------------------------------------------------- API
     def write_geometries(self, geometries, extra: dict | None = None) -> None:
@@ -131,41 +145,37 @@ class SpatialDatasetWriter:
         else:
             perm = np.arange(n, dtype=np.int64)
 
-        shards: list[ShardInfo] = []
-        for chunk in np.array_split(perm, self.n_shards):
-            if len(chunk) == 0:
-                continue  # fewer records than shards: skip the empty tail
-            sub = permute_records(cols, chunk)
-            sub_extra = {k: v[chunk] for k, v in extras.items()}
-            name = SHARD_NAME.format(len(shards))
-            path = os.path.join(self.root, name)
-            footer = write_file(
-                path, columns=sub, extra=sub_extra or None,
-                sort=None, **self._file_kwargs,
+        catalog = Catalog.open(self.root, create=True)
+        tx = catalog.begin()
+        try:
+            shards: list[ShardInfo] = []
+            for chunk in np.array_split(perm, self.n_shards):
+                if len(chunk) == 0:
+                    continue  # fewer records than shards: skip the empty tail
+                sub = permute_records(cols, chunk)
+                sub_extra = {k: v[chunk] for k, v in extras.items()}
+                shards.append(tx.stage_shard(
+                    sub, sub_extra, fsync=self.fsync, **self._file_kwargs))
+            coord_dtype = (
+                np.dtype(cols.x.dtype).str if n else np.dtype(np.float64).str
             )
-            shards.append(
-                ShardInfo(
-                    path=name,
-                    mbr=_shard_mbr(sub),
-                    n_records=sub.n_records,
-                    n_values=sub.n_values,
-                    n_pages=footer_page_count(footer),
-                    data_bytes=footer_data_bytes(footer),
-                    file_bytes=os.path.getsize(path),
-                )
+            manifest = DatasetManifest(
+                coord_dtype=coord_dtype,
+                codec=self._file_kwargs["codec"],
+                encoding=self._file_kwargs["encoding"],
+                sort=self.sort,
+                extra_schema=self.extra_schema,
+                shards=shards,
             )
-        coord_dtype = (
-            np.dtype(cols.x.dtype).str if n else np.dtype(np.float64).str
-        )
-        self._manifest = DatasetManifest(
-            coord_dtype=coord_dtype,
-            codec=self._file_kwargs["codec"],
-            encoding=self._file_kwargs["encoding"],
-            sort=self.sort,
-            extra_schema=self.extra_schema,
-            shards=shards,
-        )
-        self._manifest.save(self.root)
+            snapshot = tx.commit(manifest, fsync=self.fsync)
+        except Exception:
+            # ordinary failures clean up their partial shard files; a
+            # simulated crash (InjectedCrash is a BaseException) skips this
+            # by design and leaves the orphans to catalog GC
+            tx.abort()
+            raise
+        self._manifest = manifest
+        self.generation = snapshot.generation
         return self._manifest
 
     def __enter__(self):

@@ -31,14 +31,35 @@ from .checksum import (
     default_algo,
     have_native_crc32c,
 )
+from .durable import (
+    TMP_MARKER,
+    fsync_dir,
+    fsync_file,
+    fsync_path,
+    is_tmp_name,
+    write_atomic,
+)
 from .faults import (
+    CRASH_COMMIT_POST_RENAME,
+    CRASH_COMMIT_PRE_RENAME,
+    CRASH_COMPACT_MID,
+    CRASH_GC_MID,
+    CRASH_POINTS,
+    CRASH_SHARD_TORN,
     FAULT_CORRUPT,
     FAULT_ERROR,
     FAULT_STALL,
     FAULT_TRUNCATE,
+    CrashSpec,
     FaultSpec,
+    InjectedCrash,
     InProcessRangeServer,
     RangeResponse,
+    arm_crash,
+    crash_armed,
+    crash_injection,
+    disarm_crashes,
+    maybe_crash,
 )
 from .remote import (
     RangeRequestError,
@@ -69,6 +90,25 @@ __all__ = [
     "FAULT_ERROR",
     "FAULT_STALL",
     "FAULT_CORRUPT",
+    "InjectedCrash",
+    "CrashSpec",
+    "arm_crash",
+    "disarm_crashes",
+    "crash_armed",
+    "crash_injection",
+    "maybe_crash",
+    "CRASH_POINTS",
+    "CRASH_SHARD_TORN",
+    "CRASH_COMMIT_PRE_RENAME",
+    "CRASH_COMMIT_POST_RENAME",
+    "CRASH_COMPACT_MID",
+    "CRASH_GC_MID",
+    "write_atomic",
+    "fsync_file",
+    "fsync_path",
+    "fsync_dir",
+    "is_tmp_name",
+    "TMP_MARKER",
     "TransientServerError",
     "RangeRequestError",
     "RequestTimeout",

@@ -11,10 +11,26 @@ ranges, burn down a ``times`` budget, then heal.
 The request log (offset, length, status per request) makes assertions about
 retry behaviour — *which* ranges were re-fetched, how many attempts — exact
 rather than statistical.
+
+Write-path crash points
+-----------------------
+
+The read path's faults model a flaky *server*; the write path's model a
+dying *writer*. :func:`maybe_crash` is compiled into the durable-write /
+catalog commit sequence at named points (shard emission, pre-rename,
+post-rename, mid-compaction, mid-GC). Arming a point
+(:func:`arm_crash` / :func:`crash_injection`) makes the next ``times``
+passages raise :class:`InjectedCrash` — a ``BaseException``, so ordinary
+``except Exception`` cleanup handlers do *not* run, exactly like a process
+kill: whatever is on disk at that instant is what a reopen must cope with.
+A point armed with ``truncate_to`` / ``truncate_frac`` first tears the file
+whose path the call site passes (a partially-flushed shard), then crashes.
 """
 
 from __future__ import annotations
 
+import os
+import threading
 import time
 from dataclasses import dataclass, field
 from typing import NamedTuple
@@ -147,3 +163,126 @@ class InProcessRangeServer:
             1 for r in self.requests
             if r.fault is not None and (kind is None or r.fault == kind)
         )
+
+
+# --------------------------------------------------------------------------
+# write-path crash points
+# --------------------------------------------------------------------------
+
+# canonical point names, in write-pipeline order
+CRASH_SHARD_TORN = "writer.shard.torn"          # shard file flushed (maybe torn)
+CRASH_COMMIT_PRE_RENAME = "catalog.commit.pre_rename"    # snap tmp written
+CRASH_COMMIT_POST_RENAME = "catalog.commit.post_rename"  # snap live, HEAD stale
+CRASH_COMPACT_MID = "catalog.compact.mid"       # merged shards written, no commit
+CRASH_GC_MID = "catalog.gc.mid"                 # first orphan deleted, rest not
+
+CRASH_POINTS = (
+    CRASH_SHARD_TORN,
+    CRASH_COMMIT_PRE_RENAME,
+    CRASH_COMMIT_POST_RENAME,
+    CRASH_COMPACT_MID,
+    CRASH_GC_MID,
+)
+
+
+class InjectedCrash(BaseException):
+    """Simulated hard kill at an armed crash point.
+
+    Deliberately a ``BaseException``: ``except Exception`` cleanup code must
+    not observe it, because a real ``kill -9`` would not have run that code
+    either. Only the fault harness itself (tests) catches it.
+    """
+
+    def __init__(self, point: str):
+        super().__init__(f"injected crash at {point!r}")
+        self.point = point
+
+
+@dataclass
+class CrashSpec:
+    """One armed crash point: fire the next ``times`` passages, then heal.
+
+    ``truncate_to`` / ``truncate_frac`` tear the file the call site names
+    before crashing (``truncate_frac`` keeps that fraction of the bytes),
+    modelling a partially-flushed write.
+    """
+
+    point: str
+    times: int = 1
+    truncate_to: int | None = None
+    truncate_frac: float | None = None
+
+
+_crash_lock = threading.Lock()
+_crash_specs: dict[str, CrashSpec] = {}
+
+
+def arm_crash(point: str, *, times: int = 1, truncate_to: int | None = None,
+              truncate_frac: float | None = None) -> CrashSpec:
+    """Arm ``point``; the next ``times`` passages raise :class:`InjectedCrash`."""
+    spec = CrashSpec(point, times=int(times), truncate_to=truncate_to,
+                     truncate_frac=truncate_frac)
+    with _crash_lock:
+        _crash_specs[point] = spec
+    return spec
+
+
+def disarm_crashes() -> None:
+    """Disarm every crash point (test teardown)."""
+    with _crash_lock:
+        _crash_specs.clear()
+
+
+def crash_armed(point: str) -> bool:
+    spec = _crash_specs.get(point)
+    return spec is not None and spec.times > 0
+
+
+def maybe_crash(point: str, path=None) -> None:
+    """Fire ``point`` if armed: optionally tear ``path``, then raise.
+
+    Unarmed points are a dict lookup — the production write path pays one
+    ``dict.get`` per point, nothing else.
+    """
+    spec = _crash_specs.get(point)
+    if spec is None:
+        return
+    with _crash_lock:
+        if spec.times <= 0:
+            return
+        spec.times -= 1
+    if path is not None and (spec.truncate_to is not None
+                             or spec.truncate_frac is not None):
+        size = os.path.getsize(path)
+        keep = (spec.truncate_to if spec.truncate_to is not None
+                else int(size * spec.truncate_frac))
+        with open(path, "r+b") as fh:
+            fh.truncate(max(0, min(size, keep)))
+            fh.flush()
+            os.fsync(fh.fileno())
+    raise InjectedCrash(point)
+
+
+class crash_injection:
+    """``with crash_injection(point, ...):`` — arm on entry, disarm on exit.
+
+    Swallows the :class:`InjectedCrash` for the armed point so the test
+    body reads as "run this, crashing here"; any other exception (or a
+    crash at a different point) propagates.
+    """
+
+    def __init__(self, point: str, **kwargs):
+        self.point = point
+        self.kwargs = kwargs
+        self.crashed = False
+
+    def __enter__(self):
+        arm_crash(self.point, **self.kwargs)
+        return self
+
+    def __exit__(self, exc_type, exc, tb):
+        disarm_crashes()
+        if exc_type is InjectedCrash and exc.point == self.point:
+            self.crashed = True
+            return True
+        return False

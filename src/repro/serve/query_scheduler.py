@@ -220,6 +220,7 @@ class SpatialQueryServer:
         if device not in ("cpu", "jax"):
             raise ValueError(f"device must be 'cpu' or 'jax', got {device!r}")
         self.scanner = scanner
+        self._device_requested = device
         self.coord_dtype = np.dtype(scanner.manifest.coord_dtype)
         # device refinement needs float order keys; exotic int coordinates
         # take the host compare path (same fallback as the solo fused scan)
@@ -228,6 +229,13 @@ class SpatialQueryServer:
         self.cache = _RowGroupCache(cache_rgs)
         self.max_wave = int(max_wave)
         self.generation = 0
+        # catalog-backed scanners: pin the generation the open readers point
+        # at, so a background compaction's GC can never delete shard files
+        # out from under them mid-wave
+        self.data_generation = getattr(scanner, "generation", 0)
+        catalog = getattr(scanner, "catalog", None)
+        self._gen_pin = (catalog.pin(self.data_generation)
+                         if catalog is not None else None)
         self.pending: deque[SpatialQuery] = deque()
         self._next_qid = 0
         self._readers: dict[int, object] = {}
@@ -244,6 +252,9 @@ class SpatialQueryServer:
             r.close()
         self._readers.clear()
         self.cache.drop_all()
+        if self._gen_pin is not None:
+            self._gen_pin.release()
+            self._gen_pin = None
 
     def __enter__(self):
         return self
@@ -255,6 +266,39 @@ class SpatialQueryServer:
         """Invalidate every cached decode (dataset mutated in place)."""
         self.generation += 1
         self.cache.drop_all()
+
+    def _sync_generation(self) -> bool:
+        """Adopt a newer catalog generation before admitting a wave.
+
+        Returns True when a commit (e.g. background compaction) moved the
+        head since the last wave: open shard readers are closed, the decoded
+        row-group cache is invalidated (its keys include the bumped
+        ``generation``, so stale decodes are unreachable *and* dropped), the
+        schema-derived state is re-derived, and the server's pin moves to
+        the new generation so its files outlive the next GC.
+        """
+        refresh = getattr(self.scanner, "refresh", None)
+        if refresh is None:
+            return False
+        gen = refresh()
+        if gen == self.data_generation:
+            return False
+        for r in self._readers.values():
+            r.close()
+        self._readers.clear()
+        self.invalidate()
+        self.coord_dtype = np.dtype(self.scanner.manifest.coord_dtype)
+        self.device = (self._device_requested
+                       if self.coord_dtype.kind == "f" else "cpu")
+        self.width = self.coord_dtype.itemsize * 8
+        if self._gen_pin is not None:
+            new_pin = self.scanner.catalog.pin(gen)
+            self._gen_pin.release()
+            self._gen_pin = new_pin
+        obs.instant("serve.generation_bump", cat="serve",
+                    old=self.data_generation, new=gen)
+        self.data_generation = gen
+        return True
 
     def _reader(self, shard_i: int):
         r = self._readers.get(shard_i)
@@ -275,6 +319,7 @@ class SpatialQueryServer:
         queries in submission order."""
         out = []
         while self.pending:
+            self._sync_generation()
             wave = [self.pending.popleft()
                     for _ in range(min(self.max_wave, len(self.pending)))]
             self._run_wave(wave)

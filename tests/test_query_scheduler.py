@@ -133,6 +133,46 @@ def test_generation_invalidation_forces_redecode(lake):
         _assert_geo_equal(q.geo, geo, "post-invalidate")
 
 
+def test_catalog_commit_auto_invalidates_next_wave(tmp_path):
+    """A compaction commit between waves must bump the server's generation:
+    readers reopen, the row-group cache redecodes, results stay identical."""
+    from repro.dataset import Catalog, Compactor
+
+    cols = porto_taxi_like(n_traj=240, seed=13)
+    extra = {"tid": np.arange(cols.n_records, dtype=np.int64)}
+    root = tmp_path / "lake"
+    write_dataset(root, columns=cols, extra=extra, n_shards=6,
+                  sort="hilbert", page_values=2048)
+    scanner = SpatialDatasetScanner(root)
+    with SpatialQueryServer(scanner, device="cpu", cache_rgs=64) as srv:
+        assert srv.data_generation == 1
+        q0 = srv.submit(PORTO_BBOX)
+        srv.run()
+        decodes = srv.rg_decodes
+        assert decodes > 0
+        gen_key = srv.generation
+
+        cat = Catalog.open(root)
+        comp = Compactor(cat, target_records=1 << 30, page_values=2048)
+        assert comp.run_once().generation == 2
+
+        # next wave: refresh() sees gen 2 → readers closed, cache dropped
+        q1 = srv.submit(PORTO_BBOX)
+        srv.run()
+        assert srv.data_generation == 2
+        assert srv.generation == gen_key + 1  # stale cache keys unreachable
+        assert srv.rg_decodes > decodes  # the wave redecoded, not served stale
+        _assert_geo_equal(q1.geo, q0.geo, "post-compaction")
+        for k in q0.extras:
+            assert np.array_equal(q1.extras[k], q0.extras[k])
+        # steady state: no bump without a commit, cache warm again
+        decodes = srv.rg_decodes
+        srv.submit(PORTO_BBOX)
+        srv.run()
+        assert srv.data_generation == 2
+        assert srv.rg_decodes == decodes
+
+
 def test_columns_subset(lake):
     with SpatialQueryServer(lake, device="cpu") as srv:
         q_all = srv.submit(PORTO_BBOX)
