@@ -5,8 +5,8 @@ PR 6 made the *read* path survive a flaky store; this module makes the
 commit of a new **snapshot** file::
 
     lake/
-      shard-00000.spqf            # generation 1 data files
-      shard-g000002-00000.spqf    # files committed by later generations
+      shard-00000.spqf                     # generation 1 data files
+      shard-g000002-4f9a01c2-00000.spqf    # files of later generations
       snap-0000000001.json        # snapshot: shard entries + MBRs + CRCs
       snap-0000000002.json
       HEAD                        # pointer hint (healed on open)
@@ -14,12 +14,24 @@ commit of a new **snapshot** file::
 
 A snapshot lists the shard entries (paths, MBRs, whole-file CRC-32Cs) of one
 immutable version of the dataset. Commits follow temp-file + fsync +
-``os.replace`` discipline, so the *rename of the snapshot file is the commit
-point*: a crash anywhere before it leaves the previous generation intact
-(new files are unreferenced orphans); a crash anywhere after it leaves the
-new generation discoverable by the highest-generation rule even when the
-``HEAD`` hint / ``manifest.json`` mirror are stale (both are healed on the
-next :meth:`Catalog.open`).
+exclusive-link discipline, so the *appearance of the snapshot file is the
+commit point*: a crash anywhere before it leaves the previous generation
+intact (new files are unreferenced orphans); a crash anywhere after it
+leaves the new generation discoverable by the highest-generation rule even
+when the ``HEAD`` hint / ``manifest.json`` mirror are stale (both are
+healed on the next :meth:`Catalog.open`). The commit point is
+``os.link``-ing the fsynced temp file to ``snap-<gen>.json`` — an
+exclusive create, so when two *processes* race the same generation exactly
+one link succeeds and the loser gets :class:`CommitConflict` instead of
+silently overwriting the winner's snapshot.
+
+Every transaction stages its shard files under names carrying a random
+per-transaction token (``shard-g<gen>-<token>-<i>.spqf``), so racing
+writers — even across processes — never share staged filenames: the CAS
+loser's :meth:`CommitTx.abort` only ever unlinks files it exclusively
+owns. In-flight staged names are also registered per root and excluded
+from :meth:`Catalog.gc`, so an explicit GC racing a live commit cannot
+collect files the about-to-commit snapshot references.
 
 Readers call :meth:`Catalog.pin` to hold a generation: pinned generations
 (and their shard files) are exempt from :meth:`Catalog.gc`, so a scan keeps
@@ -46,6 +58,7 @@ import os
 import re
 import threading
 import time
+import uuid
 
 import numpy as np
 
@@ -77,14 +90,16 @@ HEAD_NAME = "HEAD"
 HEAD_FORMAT = "spatial-parquet-head"
 
 _SNAP_RE = re.compile(r"^snap-(\d{1,19})\.json$")
-_SHARD_RE = re.compile(r"^shard-(?:g\d{6}-)?\d{5}\.spqf$")
+_SHARD_RE = re.compile(r"^shard-(?:g\d{6}-(?:[0-9a-f]{8}-)?)?\d{5}\.spqf$")
 
 # in-process, cross-instance state per dataset root (realpath-keyed):
-# one reentrant lock serializing {commit-rename, pin, gc} critical sections,
-# and the pin refcounts GC consults
+# one reentrant lock serializing {commit-link, pin, gc} critical sections,
+# the pin refcounts GC consults, and the staged filenames of in-flight
+# transactions (GC must not collect a live commit's not-yet-referenced files)
 _registry_lock = threading.Lock()
 _root_locks: dict[str, threading.RLock] = {}
 _root_pins: dict[str, dict[int, int]] = {}
+_root_inflight: dict[str, dict[int, set[str]]] = {}
 
 
 def _root_key(root) -> str:
@@ -105,6 +120,17 @@ def pinned_generations(root) -> set[int]:
     key = _root_key(root)
     with _registry_lock:
         return {g for g, n in _root_pins.get(key, {}).items() if n > 0}
+
+
+def inflight_names(root) -> set[str]:
+    """Filenames staged by live in-process transactions on ``root`` (GC
+    treats these as referenced even though no snapshot lists them yet)."""
+    key = _root_key(root)
+    with _registry_lock:
+        out: set[str] = set()
+        for names in _root_inflight.get(key, {}).values():
+            out |= names
+        return out
 
 
 def file_crc32c(path, chunk: int = 1 << 20) -> int:
@@ -187,20 +213,54 @@ class CommitTx:
         self.staged: list[str] = []  # root-relative filenames written by us
         self._n = 0
         self._done = False
+        # per-transaction token: staged filenames are unique even when two
+        # transactions race the same parent generation (writer vs compactor),
+        # so abort() only ever unlinks files this transaction owns
+        self.token = uuid.uuid4().hex[:8]
+        self._protected: set[str] = set()  # names GC must leave alone
+        key = _root_key(catalog.root)
+        with _registry_lock:
+            inflight = _root_inflight.setdefault(key, {})
+            # a concurrent creator of the same virgin directory forfeits the
+            # historical plain names, keeping initial commits collision-free
+            self._contended = bool(inflight)
+            inflight[id(self)] = self._protected
 
     # --------------------------------------------------------------- staging
     def shard_filename(self, i: int | None = None) -> str:
         """Unique filename for the ``i``-th new shard of this generation.
 
         Generation 1 of a virgin directory keeps the historical plain names
-        (``shard-00000.spqf``); any generation layered over existing data
-        gets generation-qualified names so live files are never overwritten.
+        (``shard-00000.spqf``) when no other transaction is in flight; any
+        other commit gets generation- and transaction-qualified names
+        (``shard-g000002-<token>-00000.spqf``) so neither live files nor a
+        concurrent transaction's staged files are ever overwritten.
         """
         if i is None:
             i, self._n = self._n, self._n + 1
-        if self.parent_gen < 0:
+        if self.parent_gen < 0 and not self._contended:
             return f"shard-{i:05d}.spqf"
-        return f"shard-g{self.generation:06d}-{i:05d}.spqf"
+        return f"shard-g{self.generation:06d}-{self.token}-{i:05d}.spqf"
+
+    def _protect(self, name: str) -> None:
+        with _registry_lock:
+            self._protected.add(name)
+
+    def _forsake(self) -> None:
+        """Drop this transaction's in-flight GC protection (idempotent).
+
+        Called when the transaction completes, aborts, or dies — including
+        via :class:`~repro.io.faults.InjectedCrash`, because the registry is
+        process memory a real kill would have taken with it; the files on
+        disk become ordinary orphans for :meth:`Catalog.gc`.
+        """
+        key = _root_key(self.catalog.root)
+        with _registry_lock:
+            txs = _root_inflight.get(key)
+            if txs is not None:
+                txs.pop(id(self), None)
+                if not txs:
+                    _root_inflight.pop(key, None)
 
     def stage_shard(self, cols, extras=None, *, fsync: bool = True,
                     **file_kwargs) -> ShardInfo:
@@ -213,24 +273,33 @@ class CommitTx:
         name = self.shard_filename()
         path = os.path.join(self.catalog.root, name)
         # registered before the write so abort() also cleans a file that
-        # write_file itself left half-written when it raised
+        # write_file itself left half-written when it raised, and so a
+        # concurrent gc() never collects it out from under this commit
         self.staged.append(name)
-        footer = write_file(path, columns=cols, extra=extras or None,
-                            sort=None, **file_kwargs)
-        maybe_crash(CRASH_SHARD_TORN, path=path)
-        if fsync:
-            with open(path, "rb") as fh:
-                os.fsync(fh.fileno())
-        info = ShardInfo(
-            path=name,
-            mbr=_mbr_of(cols),
-            n_records=cols.n_records,
-            n_values=cols.n_values,
-            n_pages=footer_page_count(footer),
-            data_bytes=footer_data_bytes(footer),
-            file_bytes=os.path.getsize(path),
-            crc32c=file_crc32c(path),
-        )
+        self._protect(name)
+        try:
+            footer = write_file(path, columns=cols, extra=extras or None,
+                                sort=None, **file_kwargs)
+            maybe_crash(CRASH_SHARD_TORN, path=path)
+            if fsync:
+                with open(path, "rb") as fh:
+                    os.fsync(fh.fileno())
+            info = ShardInfo(
+                path=name,
+                mbr=_mbr_of(cols),
+                n_records=cols.n_records,
+                n_values=cols.n_values,
+                n_pages=footer_page_count(footer),
+                data_bytes=footer_data_bytes(footer),
+                file_bytes=os.path.getsize(path),
+                crc32c=file_crc32c(path),
+            )
+        except BaseException:
+            # the transaction is dead: drop its GC protection (a real kill
+            # would have lost this process state too); the files stay on
+            # disk for abort() or Catalog.gc() to reclaim
+            self._forsake()
+            raise
         return info
 
     # ---------------------------------------------------------------- commit
@@ -240,12 +309,18 @@ class CommitTx:
 
         Protocol: snapshot JSON → same-dir temp file → fsync →
         [``CRASH_COMMIT_PRE_RENAME``] → CAS check under the root lock →
-        ``os.replace`` (THE commit point) → dir fsync →
+        ``os.link`` of the temp onto ``snap-<gen>.json`` (THE commit point:
+        an exclusive create, so a same-generation committer in another
+        process fails instead of overwriting) → dir fsync →
         [``CRASH_COMMIT_POST_RENAME``] → HEAD + ``manifest.json`` mirror
         (each atomic) → GC of superseded, unpinned generations.
 
         Raises :class:`CommitConflict` if another writer took this
-        generation first; the dataset is untouched in that case.
+        generation first — detected by the head CAS for in-process races
+        and by the exclusive link for cross-process ones; the dataset is
+        untouched in that case. (On filesystems without hard links the
+        commit falls back to ``os.replace`` behind an existence check,
+        where same-generation exclusion is in-process only.)
         """
         if self._done:
             raise DatasetError("commit transaction already completed")
@@ -260,45 +335,85 @@ class CommitTx:
         }
         data = (json.dumps(snap_dict, indent=1) + "\n").encode()
         snap_file = os.path.join(cat.root, SNAP_NAME.format(self.generation))
-        with obs.span("catalog.commit", gen=self.generation,
-                      shards=manifest.n_shards):
-            fd, tmp = tmp_name_for(snap_file)
-            with os.fdopen(fd, "wb") as fh:
-                fh.write(data)
-                if fsync:
-                    fsync_file(fh)
-            maybe_crash(CRASH_COMMIT_PRE_RENAME)
-            with _root_lock(cat.root):
-                try:
-                    if cat.head_generation() != self.parent_gen:
-                        raise CommitConflict(
-                            f"{cat.root}: generation {self.generation} was "
-                            f"committed by another writer (head moved past "
-                            f"{self.parent_gen})")
-                    os.replace(tmp, snap_file)  # <-- the commit point
-                except Exception:
+        try:
+            with obs.span("catalog.commit", gen=self.generation,
+                          shards=manifest.n_shards):
+                fd, tmp = tmp_name_for(snap_file)
+                self._protect(os.path.basename(tmp))
+                with os.fdopen(fd, "wb") as fh:
+                    fh.write(data)
+                    if fsync:
+                        fsync_file(fh)
+                maybe_crash(CRASH_COMMIT_PRE_RENAME)
+                with _root_lock(cat.root):
                     try:
-                        os.unlink(tmp)
-                    except OSError:
-                        pass
-                    raise
-                if fsync:
-                    fsync_dir(cat.root)
-                snapshot = Snapshot(self.generation, snap_dict["parent"],
-                                    manifest, snap_file)
-                cat._snap_cache[self.generation] = snapshot
-                self._done = True
-                maybe_crash(CRASH_COMMIT_POST_RENAME)
-                cat._write_head(self.generation, fsync=fsync)
-                manifest.save(cat.root, fsync=fsync)
-                if gc if gc is not None else cat.auto_gc:
-                    cat.gc(fsync=fsync)
+                        if cat.head_generation() != self.parent_gen:
+                            raise CommitConflict(
+                                f"{cat.root}: generation {self.generation} "
+                                f"was committed by another writer (head "
+                                f"moved past {self.parent_gen})")
+                        self._publish(tmp, snap_file)
+                    except Exception:
+                        try:
+                            os.unlink(tmp)
+                        except OSError:
+                            pass
+                        raise
+                    if fsync:
+                        fsync_dir(cat.root)
+                    snapshot = Snapshot(self.generation, snap_dict["parent"],
+                                        manifest, snap_file)
+                    cat._snap_cache[self.generation] = snapshot
+                    self._done = True
+                    maybe_crash(CRASH_COMMIT_POST_RENAME)
+                    cat._write_head(self.generation, fsync=fsync)
+                    manifest.save(cat.root, fsync=fsync)
+                    # committed: the head snapshot now references the staged
+                    # files, so ordinary retention protects them from here on
+                    self._forsake()
+                    if gc if gc is not None else cat.auto_gc:
+                        cat.gc(fsync=fsync)
+        except BaseException:
+            self._forsake()
+            raise
         obs.count("catalog.commits")
         obs.observe("catalog.commit_s", time.perf_counter() - t0)
         return snapshot
 
+    def _publish(self, tmp: str, snap_file: str) -> None:
+        """Make ``tmp`` visible as ``snap_file`` — the commit point.
+
+        ``os.link`` refuses to clobber an existing file, so exactly one of
+        two processes racing the same generation number commits; the loser
+        surfaces as :class:`CommitConflict` with its temp cleaned up by the
+        caller.
+        """
+        try:
+            os.link(tmp, snap_file)
+        except FileExistsError:
+            raise CommitConflict(
+                f"{snap_file}: generation {self.generation} was committed "
+                f"by another process") from None
+        except OSError:
+            # hard links unsupported here: atomic rename keeps crash safety,
+            # same-generation exclusion degrades to the in-process CAS
+            if os.path.exists(snap_file):
+                raise CommitConflict(
+                    f"{snap_file}: generation {self.generation} was "
+                    f"committed by another process") from None
+            os.replace(tmp, snap_file)
+            return
+        try:
+            os.unlink(tmp)  # second hard link; the snapshot itself stays
+        except OSError:
+            pass
+
     def abort(self) -> None:
-        """Delete staged shard files (ordinary-failure cleanup path)."""
+        """Delete staged shard files (ordinary-failure cleanup path).
+
+        Staged names are transaction-unique, so this only ever unlinks
+        files this transaction wrote — never a racing winner's.
+        """
         if self._done:
             return
         self._done = True
@@ -308,6 +423,13 @@ class CommitTx:
             except OSError:
                 pass
         self.staged.clear()
+        self._forsake()
+
+    def __del__(self):
+        try:  # abandoned tx: do not hold GC protection for the process life
+            self._forsake()
+        except Exception:
+            pass
 
 
 class Catalog:
@@ -510,7 +632,11 @@ class Catalog:
             retained.add(head)
         retained |= {g for g in pinned_generations(self.root)
                      if g == 0 or g in set(gens)}
+        # files staged by live in-flight commits are not yet referenced by
+        # any snapshot but must survive a concurrent explicit gc(): the
+        # commit may still succeed and publish a snapshot naming them
         live_files: set[str] = {MANIFEST_NAME, HEAD_NAME}
+        live_files |= inflight_names(self.root)
         for gen in retained:
             try:
                 snap = self.load_snapshot(gen)
@@ -609,6 +735,7 @@ class Compactor:
         self.row_group_records = int(row_group_records)
         self.interval_s = float(interval_s)
         self.compactions = 0
+        self.errors = 0  # transient run_once failures survived by the loop
         self.last_error: BaseException | None = None
         self._stop = threading.Event()
         self._thread: threading.Thread | None = None
@@ -652,6 +779,12 @@ class Compactor:
                     return None
                 except Exception:
                     tx.abort()
+                    raise
+                except BaseException:
+                    # simulated kill between staging calls: leave the files
+                    # on disk for GC, but drop the in-memory in-flight
+                    # registration a real kill would have lost
+                    tx._forsake()
                     raise
             finally:
                 pin.release()
@@ -709,15 +842,36 @@ class Compactor:
 
     # ------------------------------------------------------------ background
     def start(self) -> "Compactor":
-        """Run :meth:`run_once` on a daemon thread every ``interval_s``."""
+        """Run :meth:`run_once` on a daemon thread every ``interval_s``.
+
+        Ordinary exceptions (a transient ``OSError``, a shard read that
+        loses a race with GC outside the retention window) are counted,
+        reported through :mod:`repro.obs`, and retried with exponential
+        backoff — compaction must not silently die for the process lifetime
+        on one bad tick. Only a simulated kill (:class:`InjectedCrash` /
+        any other ``BaseException``) stops the loop, staying observable in
+        ``last_error``.
+        """
         if self._thread is not None:
             raise RuntimeError("compactor already started")
         self._stop.clear()
 
         def loop():
+            consecutive = 0
             while not self._stop.is_set():
                 try:
                     self.run_once()
+                    consecutive = 0
+                except Exception as exc:
+                    self.errors += 1
+                    consecutive += 1
+                    self.last_error = exc
+                    obs.count("catalog.compact_errors")
+                    obs.instant("catalog.compact.error",
+                                error=type(exc).__name__, detail=str(exc))
+                    self._stop.wait(
+                        self.interval_s * min(2 ** consecutive, 64))
+                    continue
                 except BaseException as exc:  # keep InjectedCrash observable
                     self.last_error = exc
                     break

@@ -295,14 +295,16 @@ class SpatialDatasetScanner:
                    keep_on_device):
         # every scan holds a pin on its generation for its whole duration:
         # a compaction commit + GC racing the scan cannot delete the shard
-        # files this scan is reading (lifetime-pinned scanners reuse theirs)
-        generation = self.generation
+        # files this scan is reading. Unpinned scanners pin the *current
+        # head* (resolved atomically inside pin()), not the generation last
+        # seen by __init__/refresh() — a long-lived scanner keeps working
+        # after a live compactor retires that remembered generation from
+        # the retention window. Lifetime-pinned scanners reuse their pin.
         pin = self._pin
         release = pin is None
         if release:
-            pin = self.catalog.pin(generation)
-        else:
-            generation = pin.generation
+            pin = self.catalog.pin()
+        generation = pin.generation
         try:
             manifest, index = self._view(generation)
             return self._scan_pinned(

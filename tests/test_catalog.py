@@ -463,6 +463,166 @@ def test_scan_during_compaction_is_bit_identical(tmp_path, on_error, device):
         device=device))
 
 
+# ----------------------------------------- concurrent-transaction regressions
+def _meta_manifest(template, shards):
+    return DatasetManifest(
+        coord_dtype=template.coord_dtype, codec=template.codec,
+        encoding=template.encoding, sort=None, extra_schema={},
+        shards=shards)
+
+
+def test_racing_transactions_stage_disjoint_files(tmp_path):
+    """Two transactions on the same parent (writer vs compactor) must stage
+    under different filenames, and the CAS loser's abort() must only unlink
+    its own files — never the winner's committed ones."""
+    cols, extra = _cols()
+    root = tmp_path / "lake"
+    write_dataset(root, columns=cols, extra=extra, **WRITE_KW)
+    tx1 = Catalog.open(root).begin()
+    tx2 = Catalog.open(root).begin()
+    assert tx1.generation == tx2.generation == 2
+    c1 = porto_taxi_like(n_traj=20, seed=1)
+    c2 = porto_taxi_like(n_traj=20, seed=2)
+    i1 = tx1.stage_shard(c1, page_values=512, row_group_records=2048)
+    i2 = tx2.stage_shard(c2, page_values=512, row_group_records=2048)
+    assert i1.path != i2.path
+    template = tx1.catalog.head_snapshot().manifest
+    snap = tx1.commit(_meta_manifest(template, [i1]))
+    assert snap.generation == 2
+    # tx1's auto-GC ran inside its commit: tx2's in-flight staged file is
+    # exempt until the transaction resolves
+    assert (root / i2.path).is_file()
+    with pytest.raises(CommitConflict):
+        tx2.commit(_meta_manifest(template, [i2]))
+    tx2.abort()
+    assert not (root / i2.path).exists()    # loser cleaned its own file
+    assert (root / i1.path).is_file()       # ...and never the winner's
+    cat = Catalog.open(root)
+    assert cat.head_generation() == 2
+    assert [s.path for s in cat.head_snapshot().manifest.shards] == [i1.path]
+
+
+def test_gc_spares_inflight_staged_files(tmp_path):
+    """An explicit gc() racing a live transaction must not collect files the
+    about-to-commit snapshot will reference."""
+    from repro.dataset.catalog import inflight_names
+
+    cols, extra = _cols()
+    root = tmp_path / "lake"
+    write_dataset(root, columns=cols, extra=extra, **WRITE_KW)
+    cat = Catalog.open(root, auto_gc=False)
+    tx = cat.begin()
+    info = tx.stage_shard(porto_taxi_like(n_traj=20, seed=3),
+                          page_values=512, row_group_records=2048)
+    other = Catalog.open(root)
+    assert other.orphans() == []            # staged file is not an orphan
+    other.gc()
+    assert (root / info.path).is_file()
+    template = cat.head_snapshot().manifest
+    tx.commit(_meta_manifest(template, [info]))
+    assert (root / info.path).is_file()
+    assert inflight_names(root) == set()    # exemption dropped on resolve
+    # a dead transaction's staged files DO become collectable orphans
+    tx2 = Catalog.open(root).begin()
+    dead = tx2.stage_shard(porto_taxi_like(n_traj=20, seed=4),
+                           page_values=512, row_group_records=2048)
+    tx2._forsake()                          # simulated writer death
+    assert dead.path in Catalog.open(root).orphans()
+
+
+def test_same_generation_cross_process_commit_conflicts(tmp_path, monkeypatch):
+    """Even when both committers pass the head CAS (the cross-process stale
+    read), the exclusive-create commit point lets exactly one win; the loser
+    gets CommitConflict instead of silently overwriting the snapshot."""
+    cols, extra = _cols()
+    root = tmp_path / "lake"
+    write_dataset(root, columns=cols, extra=extra, **WRITE_KW)
+    cat = Catalog.open(root)
+    template = cat.head_snapshot().manifest
+    tx = cat.begin()                                   # parent 1 → gen 2
+    winner = Catalog.open(root)
+    winner.commit_manifest(_meta_manifest(template, list(template.shards)))
+    committed = (root / "snap-0000000002.json").read_bytes()
+    # simulate the other process's CAS read happening before the winner's
+    # commit became visible
+    monkeypatch.setattr(cat, "head_generation", lambda: 1)
+    with pytest.raises(CommitConflict):
+        tx.commit(_meta_manifest(template, []))
+    assert (root / "snap-0000000002.json").read_bytes() == committed
+    # the loser's snapshot temp was cleaned up
+    assert not [n for n in os.listdir(root) if n.startswith(".snap-")]
+
+
+def test_virgin_directory_racing_creators_do_not_share_names(tmp_path):
+    """Only the sole in-flight creator of a new root gets the historical
+    plain shard names; a concurrent second transaction is token-qualified."""
+    root = tmp_path / "lake"
+    tx1 = Catalog.open(root, create=True).begin()
+    tx2 = Catalog.open(root, create=True).begin()
+    try:
+        assert tx1.shard_filename(0) == "shard-00000.spqf"
+        name2 = tx2.shard_filename(0)
+        assert name2.startswith("shard-g000001-") and tx2.token in name2
+        assert name2 != tx1.shard_filename(0)
+    finally:
+        tx1.abort()
+        tx2.abort()
+
+
+def test_compactor_loop_survives_transient_errors(tmp_path):
+    """The background loop must count + retry ordinary exceptions, not die
+    silently on the first bad tick."""
+    import time as _time
+
+    cols, extra = _cols()
+    root = tmp_path / "lake"
+    write_dataset(root, columns=cols, extra=extra, **WRITE_KW)
+    cat = Catalog.open(root)
+    comp = Compactor(cat, target_records=1 << 30, page_values=512,
+                     row_group_records=2048, interval_s=0.01)
+    real = comp.run_once
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] <= 2:
+            raise OSError("transient store hiccup")
+        return real()
+
+    comp.run_once = flaky
+    with comp:
+        deadline = _time.monotonic() + 60
+        while comp.compactions == 0 and _time.monotonic() < deadline:
+            _time.sleep(0.02)
+    assert comp.compactions >= 1            # recovered and compacted
+    assert comp.errors == 2
+    assert isinstance(comp.last_error, OSError)
+    assert Catalog.open(root).head_generation() == 2
+
+
+def test_unpinned_scanner_survives_generation_retirement(tmp_path):
+    """A long-lived unpinned scanner must keep scanning (against the head)
+    after the generation it last saw leaves the retention window."""
+    cols, extra = _cols(n_traj=300)
+    root = tmp_path / "lake"
+    write_dataset(root, columns=cols, extra=extra, n_shards=6,
+                  sort="hilbert", page_values=512, row_group_records=2048)
+    sc = SpatialDatasetScanner(root)
+    assert sc.generation == 1
+    clean = _snapshot_of_scan(sc)
+    cat = Catalog.open(root, keep_snapshots=1)
+    per = cat.head_snapshot().manifest.shards[0].n_records
+    comp = Compactor(cat, target_records=per * 2, page_values=512,
+                     row_group_records=2048)
+    while comp.run_once() is not None:
+        pass
+    cat.gc()
+    assert 1 not in cat.list_generations()  # gen 1 fully retired
+    # no refresh(): the scan itself must adopt the newest generation
+    got = _snapshot_of_scan(sc)
+    _assert_identical(clean, got)
+
+
 def test_unpinned_scanner_scan_holds_pin_for_scan_duration(tmp_path):
     """Even without pin_generation, each scan() pins its generation so a
     concurrent commit + GC cannot delete files mid-scan; refresh() then
