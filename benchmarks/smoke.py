@@ -18,6 +18,10 @@ correctness-plane trajectories in CI, not speedups. Also recorded:
 sharded-dataset trajectory: ``dataset_write_s``, ``dataset_scan_s`` (async
 full scan over ``dataset_n_shards`` shards), ``dataset_scan_bbox_s`` and its
 pruning ratio ``dataset_bbox_bytes_read``/``dataset_bytes_total``, the
+predicate-pushdown trajectory: ``filter_scan_s`` (attribute-filtered scan
+over a lake whose per-shard zone maps are disjoint on the filter column)
+with ``filter_zone_pruned_bytes`` / ``filter_zone_pruned_ratio`` (bytes the
+zone maps pruned before any shard file was opened), the
 crash-safe catalog trajectory: ``catalog_commit_s`` (atomic snapshot commit
 latency) and ``compact_s`` with ``compact_shards_before`` /
 ``compact_shards_after`` (one background-compaction cycle), plus the
@@ -79,6 +83,7 @@ def run(scale: float = 0.25, dataset: str = "PT", repeats: int = 3,
     cols = make_dataset(dataset, scale, sort="hilbert")
     path = tmppath(".spqf")
     droot = tempfile.mkdtemp(prefix="smoke_ds_")
+    froot = tempfile.mkdtemp(prefix="smoke_flt_")
     # p50/p99 of every repeated timing, keyed like the min-based fields
     pcts: dict[str, dict] = {}
 
@@ -162,6 +167,24 @@ def run(scale: float = 0.25, dataset: str = "PT", repeats: int = 3,
         trace_info = (_traced_scan_check(sc, bbox, trace)
                       if trace is not None else None)
 
+        # attribute-predicate pushdown: a sort=None lake whose `seq` column
+        # is contiguous per shard, so the persisted zone maps prune all but
+        # one shard before any file is opened
+        from repro.core.filters import Range
+
+        write_dataset(
+            froot, columns=cols,
+            extra={"seq": np.arange(cols.n_records, dtype=np.int64)},
+            n_shards=n_shards, sort=None, codec="none")
+        fsc = SpatialDatasetScanner(froot, max_workers=n_shards)
+        pred = Range("seq", 0, max(0, cols.n_records // n_shards - 1))
+        fhit = fsc.index.query(None, filter=pred)
+        filter_zone_pruned_bytes = int(
+            fsc.index.data_bytes.sum() - fsc.index.data_bytes[fhit].sum())
+        filter_scan_s = bench("filter_scan_s", lambda: fsc.scan(filter=pred))
+        _, _, fstats = fsc.scan(filter=pred)
+        fsc.close()
+
         # crash-safe catalog: metadata-only snapshot commit latency, then one
         # background-compaction cycle (merges the bench lake back to SFC
         # order; single run — a second cycle would be a no-op)
@@ -177,6 +200,7 @@ def run(scale: float = 0.25, dataset: str = "PT", repeats: int = 3,
         if os.path.exists(path):
             os.unlink(path)
         shutil.rmtree(droot, ignore_errors=True)
+        shutil.rmtree(froot, ignore_errors=True)
     return {
         "dataset": dataset,
         "scale": scale,
@@ -197,6 +221,12 @@ def run(scale: float = 0.25, dataset: str = "PT", repeats: int = 3,
         "dataset_bbox_bytes_read": dstats.bytes_read,
         "dataset_bytes_total": dstats.bytes_total,
         "dataset_bbox_shards_read": dstats.shards_read,
+        "filter_scan_s": round(filter_scan_s, 6),
+        "filter_zone_pruned_bytes": filter_zone_pruned_bytes,
+        "filter_zone_pruned_ratio": round(
+            filter_zone_pruned_bytes / max(1, fstats.bytes_total), 4),
+        "filter_shards_read": fstats.shards_read,
+        "filter_records_returned": fstats.records_returned,
         "catalog_commit_s": round(catalog_commit_s, 6),
         "compact_s": round(compact_s, 6),
         "compact_shards_before": compact_shards_before,

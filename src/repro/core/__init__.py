@@ -10,6 +10,15 @@ Public API::
 """
 
 from .columnar import GeometryColumns, assemble, from_ragged, shred
+from .filters import (
+    And,
+    In,
+    IsNull,
+    Predicate,
+    Range,
+    canonical_bbox,
+    validate_predicate,
+)
 from .fp_delta import (
     FPDeltaStats,
     compute_best_delta_bits,
@@ -54,6 +63,13 @@ __all__ = [
     "SpatialParquetReader",
     "SpatialIndex",
     "ReadStats",
+    "Predicate",
+    "Range",
+    "In",
+    "IsNull",
+    "And",
+    "canonical_bbox",
+    "validate_predicate",
     "write_file",
     "permute_records",
     "record_centroids",

@@ -21,6 +21,8 @@ from dataclasses import dataclass
 
 import numpy as np
 
+from .filters import ColumnZones, Predicate, canonical_bbox
+
 
 @dataclass
 class PageIndexEntry:
@@ -74,6 +76,8 @@ class SpatialIndex:
                 self._ymax[i] = py["vmax"]
                 i += 1
         self._entries: list[PageIndexEntry] | None = None
+        self._footer_rgs = rgs
+        self._zones: dict[str, ColumnZones] | None = None
 
     def __len__(self) -> int:
         return len(self.row_group)
@@ -102,17 +106,61 @@ class SpatialIndex:
     def total_bytes(self) -> int:
         return int(self.nbytes.sum())
 
-    def query(self, bbox: tuple[float, float, float, float] | None) -> np.ndarray:
-        """Indices of pages intersecting ``bbox`` (all pages if None)."""
+    def zone_lookup(self, column: str) -> ColumnZones | None:
+        """Per-page statistics of one extra column (None when unknown).
+
+        Built lazily from the footer's extra-column page metadata: ``vmin``/
+        ``vmax`` are the page stats (NaN for pages written before NaN-safe
+        stats — treated as unknown, never pruned), ``nnan`` is the per-page
+        NaN count (``-1`` for files without it), ``count`` the record count.
+        """
+        if self._zones is None:
+            zones: dict[str, ColumnZones] = {}
+            cols = self._footer_rgs[0].get("extra", {}) if self._footer_rgs else {}
+            n = len(self)
+            for k in cols:
+                vmin = np.empty(n, np.float64)
+                vmax = np.empty(n, np.float64)
+                nnan = np.empty(n, np.int64)
+                i = 0
+                for rg in self._footer_rgs:
+                    for p in rg["extra"][k]:
+                        vmin[i] = p["vmin"]
+                        vmax[i] = p["vmax"]
+                        nnan[i] = p.get("nnan", -1)
+                        i += 1
+                zones[k] = ColumnZones(vmin, vmax, nnan, self.rec_count.copy())
+            self._zones = zones
+        return self._zones.get(column)
+
+    def query(
+        self,
+        bbox: tuple[float, float, float, float] | None,
+        filter: Predicate | None = None,
+    ) -> np.ndarray:
+        """Indices of pages that may satisfy ``bbox`` ∧ ``filter``.
+
+        ``bbox=None`` means no spatial constraint; an empty bbox under
+        :func:`~repro.core.filters.canonical_bbox` (NaN bound or inverted
+        extent) hits nothing. ``filter`` prunes via the per-page zone
+        statistics of the extra columns it references (conservative: a page
+        is only dropped when its stats prove no record can match).
+        """
         if bbox is None:
-            return np.arange(len(self))
-        qx0, qy0, qx1, qy1 = bbox
-        hit = (
-            (self._xmin <= qx1)
-            & (self._xmax >= qx0)
-            & (self._ymin <= qy1)
-            & (self._ymax >= qy0)
-        )
+            hit = np.ones(len(self), bool)
+        else:
+            b = canonical_bbox(bbox)
+            if b is None:
+                return np.zeros(0, dtype=np.intp)
+            qx0, qy0, qx1, qy1 = b
+            hit = (
+                (self._xmin <= qx1)
+                & (self._xmax >= qx0)
+                & (self._ymin <= qy1)
+                & (self._ymax >= qy0)
+            )
+        if filter is not None:
+            hit = hit & filter.zone_mask(self.zone_lookup, len(self))
         return np.flatnonzero(hit)
 
     def page_runs(self, bbox, hit: np.ndarray | None = None) -> list[tuple[int, int, int]]:
@@ -121,7 +169,8 @@ class SpatialIndex:
         Pages ``p0 .. p1-1`` of ``row_group`` all intersect ``bbox``. Runs are
         emitted in file order (entries are built sorted by row group then
         page), so the reader can turn each one into a single coalesced read.
-        Pass ``hit`` (a ``query(bbox)`` result) to avoid re-running the query.
+        Pass ``hit`` (a ``query(bbox)`` result — possibly predicate-pruned)
+        to avoid re-running the query.
         """
         if hit is None:
             hit = self.query(bbox)
@@ -138,7 +187,12 @@ class SpatialIndex:
         ]
 
     def selectivity(self, bbox) -> float:
-        """Fraction of pages the query must read (1.0 = no pruning)."""
+        """Fraction of pages the query must read (1.0 = no pruning).
+
+        An empty file reports 1.0 — "nothing was pruned" — so downstream
+        pruning-ratio accounting never mistakes an empty index for a
+        perfectly-pruned one.
+        """
         if not len(self):
-            return 0.0
+            return 1.0
         return len(self.query(bbox)) / len(self)

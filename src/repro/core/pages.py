@@ -107,6 +107,7 @@ class PageMeta:
     n_bits: int             # FP-delta n* (0 => raw mode inside fp_delta)
     n_resets: int
     crc: int | None = None  # checksum of the stored bytes (format v2 files)
+    nnan: int | None = None  # NaN count (extra-column pages with zone stats)
 
     def to_dict(self) -> dict:
         d = self.__dict__.copy()
@@ -114,6 +115,10 @@ class PageMeta:
             # v1 files carry no checksums; omitting the key keeps their
             # footers byte-identical to the pre-checksum format
             del d["crc"]
+        if d.get("nnan") is None:
+            # coordinate pages and pre-zone-map files omit the key, keeping
+            # their footers byte-identical to the earlier format
+            del d["nnan"]
         return d
 
     @staticmethod

@@ -92,6 +92,7 @@ import time
 from bisect import bisect_right
 from collections import deque
 from dataclasses import dataclass, field
+from dataclasses import replace as dc_replace
 
 import msgpack
 import numpy as np
@@ -101,6 +102,7 @@ from repro.io.checksum import ChecksumError, checksum_fn, crc32c
 from repro.io.source import LocalFileSource
 
 from .columnar import DeviceCoords, GeometryColumns, assemble
+from .filters import Predicate, canonical_bbox, validate_predicate
 from .fp_delta import fp_delta_execute
 from .geometry import Geometry
 from .index import SpatialIndex
@@ -596,13 +598,21 @@ class SpatialParquetReader:
         device: str = "cpu",
         *,
         keep_on_device: bool = False,
+        filter: Predicate | None = None,
     ) -> tuple[GeometryColumns | None, dict[str, np.ndarray], ReadStats]:
         """Decode records whose *page* bbox intersects ``bbox``.
 
         Returns (geometry columns, extra columns, stats). ``refine=True``
         additionally drops records whose exact bbox misses the query.
         ``columns`` restricts which extra columns decode ("geometry" is
-        implied unless columns excludes it explicitly). ``coalesce=False``
+        implied unless columns excludes it explicitly). ``filter`` is a
+        :mod:`repro.core.filters` predicate over extra columns: pages whose
+        zone statistics prove no match are skipped, and the surviving
+        records are filtered *exactly* (the result is always identical to
+        reading without zone pruning and masking afterwards — the record
+        mask is ``bbox ∧ attrs`` when combined with ``refine``). Columns a
+        filter needs are decoded as required but only returned when
+        requested. ``coalesce=False``
         disables batched range I/O (one read per blob; identical results).
         ``device="jax"`` decodes surviving FP-delta coordinate pages on the
         accelerator (one Pallas page-stream launch per row group,
@@ -624,14 +634,14 @@ class SpatialParquetReader:
         if not obs.enabled():
             return self._read_columnar_impl(
                 bbox, columns, refine, coalesce, device,
-                keep_on_device=keep_on_device)
+                keep_on_device=keep_on_device, filter=filter)
         t0 = time.perf_counter()
         c0 = time.process_time()
         with obs.span("scan.file", path=self.path, device=device,
-                      refine=bool(refine)):
+                      refine=bool(refine), filtered=filter is not None):
             out = self._read_columnar_impl(
                 bbox, columns, refine, coalesce, device,
-                keep_on_device=keep_on_device)
+                keep_on_device=keep_on_device, filter=filter)
         wall = time.perf_counter() - t0
         cpu = time.process_time() - c0
         stats = out[2]
@@ -648,24 +658,36 @@ class SpatialParquetReader:
         return out
 
     def _read_columnar_impl(self, bbox, columns, refine, coalesce, device,
-                            *, keep_on_device):
+                            *, keep_on_device, filter=None):
         if device not in ("cpu", "jax"):
             raise ValueError(f"device must be 'cpu' or 'jax', got {device!r}")
         use_device = device == "jax"
         if keep_on_device and not use_device:
             raise ValueError("keep_on_device=True requires device='jax'")
+        if filter is not None:
+            validate_predicate(filter, self.extra_schema)
         want_geom = columns is None or "geometry" in columns
         want_extra = (
             list(self.extra_schema)
             if columns is None
             else [c for c in columns if c in self.extra_schema]
         )
+        # columns the filter needs decode too, but are only *returned* when
+        # requested (trimmed below)
+        read_extra = list(want_extra)
+        if filter is not None:
+            read_extra += [c for c in sorted(filter.columns())
+                           if c not in want_extra]
         idx = self.index
         stats = ReadStats(pages_total=len(idx), bytes_total=self._data_bytes)
         src_stats0 = self._source.stats.copy()
 
         # group hit-page runs by row group (runs arrive in file order)
-        hit = idx.query(bbox)
+        hit = idx.query(bbox, filter=filter)
+        if filter is not None and obs.enabled():
+            # coordinate bytes of pages the zone stats pruned beyond bbox
+            zoned = np.setdiff1d(idx.query(bbox), hit, assume_unique=True)
+            obs.count("pruned.zone_bytes", int(idx.nbytes[zoned].sum()))
         runs_by_rg: dict[int, list[tuple[int, int]]] = {}
         for rg_i, p0, p1 in idx.page_runs(bbox, hit=hit):
             runs_by_rg.setdefault(rg_i, []).append((p0, p1))
@@ -678,12 +700,13 @@ class SpatialParquetReader:
             if not runs:
                 continue
             base = int(np.searchsorted(idx.row_group, rg_i, side="left"))
-            extra_pages = {k: rg["extra"][k] for k in want_extra}
+            extra_pages = {k: rg["extra"][k] for k in read_extra}
             items.append((rg_i, rg, runs, base, extra_pages,
                           self._rg_ranges(rg, runs, base, want_geom, extra_pages)))
 
         fused = use_device and want_geom and (
             keep_on_device or (refine and bbox is not None)
+            or (filter is not None and self.coord_dtype.kind == "f")
         )
         if fused and refine and bbox is not None and self.coord_dtype.kind != "f":
             if keep_on_device:
@@ -691,8 +714,11 @@ class SpatialParquetReader:
             fused = False  # exotic int coords: decode on device, refine on host
         if fused:
             out = self._read_columnar_fused(
-                bbox, refine, coalesce, keep_on_device, want_extra,
-                items, stats, hit)
+                bbox, refine, coalesce, keep_on_device, read_extra,
+                items, stats, hit, filter=filter)
+            if filter is not None:
+                geo_f, extras_f, stats_f = out
+                out = (geo_f, {k: extras_f[k] for k in want_extra}, stats_f)
             self._fold_source_stats(stats, src_stats0)
             return out
 
@@ -707,7 +733,7 @@ class SpatialParquetReader:
         total_recs = int(idx.rec_count[hit].sum()) if len(hit) else 0
         extra_all = {
             k: np.empty(total_recs, np.dtype(self.extra_schema[k]))
-            for k in want_extra
+            for k in read_extra
         }
 
         types_parts: list[np.ndarray] = []
@@ -790,13 +816,26 @@ class SpatialParquetReader:
         else:
             geo = None
         extras = {k: v[:we] for k, v in extra_all.items()}
+        keep_mask = None
         if refine and bbox is not None and geo is not None:
             with obs.span("refine.host", cat="refine"):
-                keep = _records_intersecting(geo, bbox)
-                geo = permute_records(geo, keep)
-                extras = {k: v[keep] for k, v in extras.items()}
-            obs.count("pruned.record_bytes",
-                      (w - geo.n_values) * 2 * self.coord_dtype.itemsize)
+                starts = geo.record_value_starts()
+                counts = np.diff(np.append(starts, geo.n_values))
+                keep_mask = _bbox_keep_mask(geo.x, geo.y, counts, bbox)
+        if filter is not None:
+            attr = (filter.mask(extras) if we
+                    else np.zeros(0, bool))
+            if we:
+                obs.observe("filter.selectivity", float(attr.sum()) / we)
+            keep_mask = attr if keep_mask is None else keep_mask & attr
+        if keep_mask is not None:
+            if geo is not None:
+                geo = permute_records(geo, np.flatnonzero(keep_mask))
+                obs.count("pruned.record_bytes",
+                          (w - geo.n_values) * 2 * self.coord_dtype.itemsize)
+            extras = {k: v[keep_mask] for k, v in extras.items()}
+        if filter is not None:
+            extras = {k: extras[k] for k in want_extra}
         stats.records_returned = geo.n_records if geo is not None else (
             len(next(iter(extras.values()))) if extras else 0
         )
@@ -814,7 +853,7 @@ class SpatialParquetReader:
 
     # ------------------------------------------------------ fused device scan
     def _read_columnar_fused(self, bbox, refine, coalesce, keep_on_device,
-                             want_extra, items, stats, hit):
+                             want_extra, items, stats, hit, filter=None):
         """Decode → per-record bbox refine → compact, all device-resident.
 
         Per row group: levels decode on the host (they drive segmentation),
@@ -823,6 +862,12 @@ class SpatialParquetReader:
         (`decode_refine_stream`). Only the per-record survivor mask and the
         surviving coordinate values cross back to the host — or nothing at
         all with ``keep_on_device=True``.
+
+        With ``filter`` the host-evaluated attribute mask is AND-ed into the
+        chunk's per-record ``valid`` operand before the launch, so the device
+        computes ``bbox ∧ attrs`` in one pass and survivor compaction (the
+        gather back to the host) already excludes records the predicate
+        rejects.
         """
         from repro.kernels.fp_delta import (
             build_page_stream,
@@ -838,6 +883,7 @@ class SpatialParquetReader:
         dtype = self.coord_dtype
         width = dtype.itemsize * 8
         do_refine = refine and bbox is not None
+        do_compact = do_refine or filter is not None
 
         total_recs = int(idx.rec_count[hit].sum()) if len(hit) else 0
         extra_all = {
@@ -861,6 +907,7 @@ class SpatialParquetReader:
                 xp, yp = rg["x_pages"], rg["y_pages"]
                 lv = self._decode_rg_levels(src, rg, stats)
                 rec_vcounts_rg = lv.record_value_counts()
+                we0 = we  # this row group's record span in the extra columns
 
                 plans: list = []            # x,y plan per page, stream order
                 pairs: list[tuple[int, int]] = []   # local record range per pair
@@ -906,10 +953,17 @@ class SpatialParquetReader:
                     plan_span.add(pages=len(pairs))
                 rec_vcounts = (np.concatenate(vc_parts) if vc_parts
                                else np.zeros(0, np.int64))
+                # host-evaluated attribute mask for this row group's read
+                # records (aligned with rec_vcounts / the chunk record ranges)
+                attr_rg = None
+                if filter is not None:
+                    attr_rg = filter.mask(
+                        {k: extra_all[k][we0:we] for k in filter.columns()})
 
                 # chunk page pairs into VMEM-sized fused launches
                 for kind, cplans, cpairs, (rl, rh) in chunk_plan_pairs(plans, pairs):
                     vc = rec_vcounts[rl:rh]
+                    attr_c = attr_rg[rl:rh] if attr_rg is not None else None
                     if kind == "host":
                         # a single page too large for any launch: decode this
                         # pair on the host (same bits via fp_delta_execute)
@@ -919,13 +973,15 @@ class SpatialParquetReader:
                             y_v = fp_delta_execute(cplans[1])
                             keep_c = (_bbox_keep_mask(x_v, y_v, vc, bbox)
                                       if do_refine else np.ones(len(vc), bool))
+                            if attr_c is not None:
+                                keep_c = keep_c & attr_c
                             starts = np.cumsum(vc) - vc
                             iv = ragged_ranges(starts[keep_c], vc[keep_c])
                             xs, ys = x_v[iv], y_v[iv]
                         if keep_on_device:
                             xs = DeviceCoords.from_numpy(xs)
                             ys = DeviceCoords.from_numpy(ys)
-                        if do_refine and obs.enabled():
+                        if do_compact and obs.enabled():
                             vals_pruned += int(vc.sum() - vc[keep_c].sum())
                         keep_parts.append(keep_c)
                         x_parts.append(xs)
@@ -937,13 +993,21 @@ class SpatialParquetReader:
                         stream = build_page_stream(cplans)
                         aux = build_refine_aux(
                             stream, [(a - rl, b - rl) for a, b in cpairs], vc)
+                        if attr_c is not None and do_refine:
+                            # the device record mask is valid ∧ bbox; AND-ing
+                            # the attribute mask into a fresh copy of valid
+                            # makes it bbox ∧ attrs in the same launch
+                            v2 = aux.valid.copy()
+                            v2[:len(attr_c)] &= attr_c
+                            aux = dc_replace(aux, valid=v2)
                         if do_refine:
                             res = decode_refine_stream(stream, aux, bbox)
                             keep_c, lo_d, hi_d = res.keep, res.lo, res.hi
                         else:
                             lo_d, hi_d = decode_stream_device(stream)
-                            keep_c = np.ones(len(vc), bool)
-                    if do_refine and obs.enabled():
+                            keep_c = (attr_c.copy() if attr_c is not None
+                                      else np.ones(len(vc), bool))
+                    if do_compact and obs.enabled():
                         vals_pruned += int(vc.sum() - vc[keep_c].sum())
                     keep_parts.append(keep_c)
                     with obs.span("rg.gather", cat="transfer", rg=rg_i):
@@ -966,7 +1030,7 @@ class SpatialParquetReader:
             type_rep = np.concatenate(type_rep_parts)
             rep = np.concatenate(rep_parts)
             defn = np.concatenate(defn_parts)
-            if do_refine:
+            if do_compact:
                 # record-aligned level subset == permute_records on the kept
                 # (sorted) records: canonical levels stay canonical
                 slot_keep = keep_all[np.cumsum(rep == 0) - 1]
@@ -985,8 +1049,10 @@ class SpatialParquetReader:
         else:
             geo = None
         extras = {k: v[:we] for k, v in extra_all.items()}
-        if do_refine and geo is not None:
+        if do_compact and geo is not None:
             extras = {k: v[keep_all] for k, v in extras.items()}
+        if filter is not None and we:
+            obs.observe("filter.selectivity", float(keep_all.sum()) / we)
         stats.records_returned = geo.n_records if geo is not None else (
             len(next(iter(extras.values()))) if extras else 0
         )
@@ -1112,10 +1178,17 @@ def _bbox_keep_mask(x: np.ndarray, y: np.ndarray, counts: np.ndarray,
                     bbox) -> np.ndarray:
     """Exact per-record bbox mask over contiguous value slices (the host
     refinement oracle: NaN-propagating ``minimum.reduceat`` + float
-    compares — any NaN coordinate drops its record)."""
+    compares — any NaN coordinate drops its record). The query box goes
+    through the shared :func:`~repro.core.filters.canonical_bbox` rule
+    first, so an empty box (NaN bound / inverted extent) keeps nothing —
+    the same answer the shard-, page- and device-record-level tests give.
+    """
     counts = np.asarray(counts, np.int64)
-    starts = np.cumsum(counts) - counts
     keep = np.zeros(len(counts), dtype=bool)
+    bbox = canonical_bbox(bbox)
+    if bbox is None:
+        return keep
+    starts = np.cumsum(counts) - counts
     nz = counts > 0
     if nz.any():
         s = starts[nz]

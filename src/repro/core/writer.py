@@ -311,26 +311,49 @@ class SpatialParquetWriter:
                     ).to_dict()
                 )
             rg[f"{axis}_pages"] = pages
-        # extra per-record columns, page-aligned with the coordinate pages
+        # extra per-record columns, page-aligned with the coordinate pages.
+        # Numeric columns get NaN-safe per-page zone stats (vmin/vmax over
+        # non-NaN values + NaN count) in one batched pass per column — the
+        # float32 path reduces on-device through page_minmax — plus a
+        # per-row-group aggregate under rg["extra_stats"] that the catalog
+        # rolls into the shard's persisted zone map.
         rg["extra"] = {}
+        rg["extra_stats"] = {}
+        ebounds = np.array([r0 for r0, _ in splits] + [cols.n_records], np.int64)
         for k, v in extras.items():
             pages = []
             enc = self.encoding if v.dtype.itemsize in (4, 8) else "raw"
+            numeric = v.dtype.kind in "iuf"
+            if numeric and len(splits):
+                from repro.kernels.minmax import column_page_stats_ex
+
+                pmin, pmax, pnan = column_page_stats_ex(v, ebounds)
+            else:
+                pmin = np.full(len(splits), np.inf)
+                pmax = np.full(len(splits), -np.inf)
+                pnan = np.zeros(len(splits), np.int64)
             encoded = encode_pages(v, [(r0, r1) for r0, r1 in splits], enc, self.codec)
-            for (buf, st), (r0, r1) in zip(encoded, splits):
-                chunk = v[r0:r1]
+            for p_i, ((buf, st), (r0, r1)) in enumerate(zip(encoded, splits)):
                 off, nb, crc = self._write_blob(buf)
                 pages.append(
                     PageMeta(
                         offset=off, nbytes=nb, count=r1 - r0,
                         rec_start=r0, rec_count=r1 - r0,
-                        vmin=float(chunk.min()) if len(chunk) else float("inf"),
-                        vmax=float(chunk.max()) if len(chunk) else float("-inf"),
+                        vmin=float(pmin[p_i]), vmax=float(pmax[p_i]),
                         encoding=enc, n_bits=st["n_bits"], n_resets=st["n_resets"],
-                        crc=crc,
+                        crc=crc, nnan=int(pnan[p_i]) if numeric else None,
                     ).to_dict()
                 )
             rg["extra"][k] = pages
+            if numeric:
+                counts = np.diff(ebounds)
+                live = counts > pnan  # pages with at least one non-NaN value
+                rg["extra_stats"][k] = {
+                    "min": float(pmin[live].min()) if live.any() else None,
+                    "max": float(pmax[live].max()) if live.any() else None,
+                    "nnan": int(pnan.sum()),
+                    "count": int(cols.n_records),
+                }
         self._row_groups.append(rg)
 
 

@@ -293,6 +293,7 @@ class CommitTx:
                 data_bytes=footer_data_bytes(footer),
                 file_bytes=os.path.getsize(path),
                 crc32c=file_crc32c(path),
+                zone_maps=zone_maps_from_footer(footer),
             )
         except BaseException:
             # the transaction is dead: drop its GC protection (a real kill
@@ -705,6 +706,30 @@ def _mbr_of(cols) -> tuple[float, float, float, float]:
         return (float("inf"), float("inf"), float("-inf"), float("-inf"))
     return (float(cols.x.min()), float(cols.y.min()),
             float(cols.x.max()), float(cols.y.max()))
+
+
+def zone_maps_from_footer(footer: dict) -> dict | None:
+    """Shard-level zone maps: the footer's per-row-group ``extra_stats``
+    merged across row groups (min of mins, max of maxes, summed counts).
+
+    Returns None when the file carries no extra-column stats (no extras, or
+    written before zone maps existed) — the shard then simply never gets
+    predicate-pruned. Compacted shards get fresh merged maps for free
+    because every staged shard passes through here.
+    """
+    merged: dict[str, dict] = {}
+    seen = False
+    for rg in footer.get("row_groups", ()):
+        for k, st in rg.get("extra_stats", {}).items():
+            seen = True
+            z = merged.setdefault(
+                k, {"min": None, "max": None, "nnan": 0, "count": 0})
+            if st["min"] is not None:
+                z["min"] = st["min"] if z["min"] is None else min(z["min"], st["min"])
+                z["max"] = st["max"] if z["max"] is None else max(z["max"], st["max"])
+            z["nnan"] += int(st["nnan"])
+            z["count"] += int(st["count"])
+    return merged if seen else None
 
 
 class Compactor:

@@ -16,6 +16,8 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.core.filters import ColumnZones, Predicate, canonical_bbox
+
 from .manifest import DatasetManifest
 
 
@@ -37,6 +39,39 @@ class DatasetIndex:
             self.n_records[i] = s.n_records
             self.n_pages[i] = s.n_pages
             self.data_bytes[i] = s.data_bytes
+        self._zones: dict[str, ColumnZones] | None = None
+
+    def zone_lookup(self, column: str) -> ColumnZones | None:
+        """Per-shard zone-map statistics of one extra column.
+
+        Built lazily from the manifest's ``ShardInfo.zone_maps``. A shard
+        without a zone map for the column (older snapshots, pre-zone-map
+        files) contributes unknown stats (NaN min/max, ``-1`` counts) and is
+        never pruned. Returns None when *no* shard knows the column.
+        """
+        if self._zones is None:
+            zones: dict[str, ColumnZones] = {}
+            cols = set()
+            for s in self.manifest.shards:
+                cols.update(s.zone_maps or ())
+            n = len(self)
+            for k in sorted(cols):
+                vmin = np.full(n, np.nan)
+                vmax = np.full(n, np.nan)
+                nnan = np.full(n, -1, np.int64)
+                count = np.full(n, -1, np.int64)
+                for i, s in enumerate(self.manifest.shards):
+                    z = (s.zone_maps or {}).get(k)
+                    if z is None:
+                        continue
+                    # min/max of None = no non-NaN values in the shard
+                    vmin[i] = np.inf if z["min"] is None else z["min"]
+                    vmax[i] = -np.inf if z["max"] is None else z["max"]
+                    nnan[i] = z["nnan"]
+                    count[i] = z["count"]
+                zones[k] = ColumnZones(vmin, vmax, nnan, count)
+            self._zones = zones
+        return self._zones.get(column)
 
     def __len__(self) -> int:
         return len(self._xmin)
@@ -49,17 +84,35 @@ class DatasetIndex:
     def total_pages(self) -> int:
         return int(self.n_pages.sum())
 
-    def query(self, bbox: tuple[float, float, float, float] | None) -> np.ndarray:
-        """Indices of shards intersecting ``bbox`` (all shards if None)."""
+    def query(
+        self,
+        bbox: tuple[float, float, float, float] | None,
+        filter: Predicate | None = None,
+    ) -> np.ndarray:
+        """Indices of shards that may satisfy ``bbox`` ∧ ``filter``.
+
+        ``bbox=None`` means no spatial constraint; an empty bbox under
+        :func:`~repro.core.filters.canonical_bbox` (NaN bound or inverted
+        extent) hits nothing — the same rule the page- and record-level
+        tests apply, so every pruning level answers consistently. ``filter``
+        prunes from the manifest alone via the persisted per-shard zone
+        maps, before any shard file is opened.
+        """
         if bbox is None:
-            return np.arange(len(self))
-        qx0, qy0, qx1, qy1 = bbox
-        hit = (
-            (self._xmin <= qx1)
-            & (self._xmax >= qx0)
-            & (self._ymin <= qy1)
-            & (self._ymax >= qy0)
-        )
+            hit = np.ones(len(self), bool)
+        else:
+            b = canonical_bbox(bbox)
+            if b is None:
+                return np.zeros(0, dtype=np.intp)
+            qx0, qy0, qx1, qy1 = b
+            hit = (
+                (self._xmin <= qx1)
+                & (self._xmax >= qx0)
+                & (self._ymin <= qy1)
+                & (self._ymax >= qy0)
+            )
+        if filter is not None:
+            hit = hit & filter.zone_mask(self.zone_lookup, len(self))
         return np.flatnonzero(hit)
 
     def shard_runs(self, bbox, hit: np.ndarray | None = None) -> list[tuple[int, int]]:
@@ -80,7 +133,12 @@ class DatasetIndex:
         return [(int(hit[s]), int(hit[e - 1]) + 1) for s, e in zip(starts, ends)]
 
     def selectivity(self, bbox) -> float:
-        """Fraction of shards the query must open (1.0 = no pruning)."""
+        """Fraction of shards the query must open (1.0 = no pruning).
+
+        An empty dataset reports 1.0 — "nothing was pruned" — not 0.0,
+        which downstream pruning-ratio accounting would read as perfect
+        pruning.
+        """
         if not len(self):
-            return 0.0
+            return 1.0
         return len(self.query(bbox)) / len(self)

@@ -39,6 +39,12 @@ class ShardInfo:
     data_bytes: int  # stored bytes of every blob in the shard
     file_bytes: int  # on-disk size incl. magic + footer
     crc32c: int | None = None  # whole-file CRC-32C (catalog commits set it)
+    # per-column zone map: {col: {"min", "max", "nnan", "count"}} over the
+    # whole shard (min/max are None when the column has no non-NaN values);
+    # lets DatasetIndex.query(bbox, filter=) prune the shard from the
+    # manifest alone, before its file is opened. Optional: older snapshots
+    # and pre-zone-map shards simply never get predicate-pruned.
+    zone_maps: dict | None = None
 
     def to_dict(self) -> dict:
         d = {
@@ -52,6 +58,16 @@ class ShardInfo:
         }
         if self.crc32c is not None:
             d["crc32c"] = int(self.crc32c)
+        if self.zone_maps is not None:
+            d["zone_maps"] = {
+                k: {
+                    "min": None if z["min"] is None else float(z["min"]),
+                    "max": None if z["max"] is None else float(z["max"]),
+                    "nnan": int(z["nnan"]),
+                    "count": int(z["count"]),
+                }
+                for k, z in self.zone_maps.items()
+            }
         return d
 
     @classmethod
@@ -65,6 +81,7 @@ class ShardInfo:
             data_bytes=d["data_bytes"],
             file_bytes=d["file_bytes"],
             crc32c=d.get("crc32c"),
+            zone_maps=d.get("zone_maps"),
         )
 
     def validate(self, index: int, where: str) -> None:
@@ -93,6 +110,32 @@ class ShardInfo:
                 or not (0 <= self.crc32c < 1 << 32)):
             raise DatasetError(
                 f"{who}: 'crc32c' must be a uint32, got {self.crc32c!r}")
+        if self.zone_maps is not None:
+            if not isinstance(self.zone_maps, dict):
+                raise DatasetError(
+                    f"{who}: 'zone_maps' must be an object, got "
+                    f"{type(self.zone_maps).__name__}")
+            for col, z in self.zone_maps.items():
+                zwho = f"{who}: zone_maps[{col!r}]"
+                if not isinstance(z, dict) or not {
+                        "min", "max", "nnan", "count"} <= set(z):
+                    raise DatasetError(
+                        f"{zwho}: needs min/max/nnan/count, got {z!r}")
+                for k in ("min", "max"):
+                    if z[k] is not None and not isinstance(
+                            z[k], (int, float)):
+                        raise DatasetError(
+                            f"{zwho}: {k!r} must be a number or null, got "
+                            f"{z[k]!r}")
+                for k in ("nnan", "count"):
+                    if (not isinstance(z[k], int) or isinstance(z[k], bool)
+                            or z[k] < 0):
+                        raise DatasetError(
+                            f"{zwho}: {k!r} must be a non-negative integer, "
+                            f"got {z[k]!r}")
+                if (z["min"] is None) != (z["max"] is None):
+                    raise DatasetError(
+                        f"{zwho}: min/max must be both set or both null")
 
 
 @dataclass

@@ -177,7 +177,7 @@ class SpatialDatasetScanner:
         return self._open_shard(shard_path(self.root, self.manifest.shards[shard_i]))
 
     def _read_shard_once(self, path: str, bbox, columns, refine, coalesce,
-                         device, keep_on_device):
+                         device, keep_on_device, filter):
         src = self._open_source(path)
         try:
             with SpatialParquetReader(
@@ -187,7 +187,7 @@ class SpatialDatasetScanner:
                 return r.read_columnar(
                     bbox=bbox, columns=columns, refine=refine,
                     coalesce=coalesce, device=device,
-                    keep_on_device=keep_on_device,
+                    keep_on_device=keep_on_device, filter=filter,
                 )
         except Exception as exc:
             # a failed attempt still did real I/O (and maybe retried,
@@ -198,7 +198,8 @@ class SpatialDatasetScanner:
             raise
 
     def _read_shard(self, manifest: DatasetManifest, shard_i: int, bbox,
-                    columns, refine, coalesce, device, keep_on_device):
+                    columns, refine, coalesce, device, keep_on_device,
+                    filter):
         """Read one shard under the scanner's error policy.
 
         ``manifest`` is the scan's pinned snapshot — passed explicitly so a
@@ -222,7 +223,7 @@ class SpatialDatasetScanner:
                 try:
                     res = self._read_shard_once(
                         path, bbox, columns, refine, coalesce, device,
-                        keep_on_device)
+                        keep_on_device, filter)
                     return res, attempt, None, failed
                 except Exception as exc:
                     last = exc
@@ -249,6 +250,7 @@ class SpatialDatasetScanner:
         device: str = "cpu",
         *,
         keep_on_device: bool = False,
+        filter=None,
     ) -> tuple[GeometryColumns | None, dict[str, np.ndarray], ReadStats]:
         """Dataset-wide ``read_columnar``: shard pruning + parallel fan-out.
 
@@ -263,6 +265,13 @@ class SpatialDatasetScanner:
         ``keep_on_device=True`` returns device-resident coordinates merged
         across shards on the accelerator.
 
+        ``filter`` is an attribute predicate
+        (:class:`~repro.core.filters.Predicate`); shards whose manifest
+        zone maps cannot match are pruned before their files are opened
+        (counted in ``pruned.zone_bytes``), surviving shards apply the same
+        predicate at page and record granularity, and results equal a full
+        scan masked by the predicate row-by-row.
+
         With telemetry on (``repro.obs.enable()``) the query runs inside a
         ``scan.dataset`` span with one ``shard`` child span per surviving
         shard (worker threads inherit the span context), and on return
@@ -272,14 +281,15 @@ class SpatialDatasetScanner:
         """
         if not obs.enabled():
             return self._scan_impl(bbox, columns, refine, parallel, coalesce,
-                                   device, keep_on_device)
+                                   device, keep_on_device, filter)
         t0 = time.perf_counter()
         c0 = time.process_time()
         with obs.span("scan.dataset", root=self.root, device=device,
-                      refine=bool(refine)) as sp:
+                      refine=bool(refine),
+                      filtered=filter is not None) as sp:
             geo, extras, stats = self._scan_impl(
                 bbox, columns, refine, parallel, coalesce, device,
-                keep_on_device)
+                keep_on_device, filter)
             sp.add(shards_read=stats.shards_read,
                    records=stats.records_returned)
         wall = time.perf_counter() - t0
@@ -292,7 +302,7 @@ class SpatialDatasetScanner:
         return geo, extras, stats
 
     def _scan_impl(self, bbox, columns, refine, parallel, coalesce, device,
-                   keep_on_device):
+                   keep_on_device, filter=None):
         # every scan holds a pin on its generation for its whole duration:
         # a compaction commit + GC racing the scan cannot delete the shard
         # files this scan is reading. Unpinned scanners pin the *current
@@ -309,14 +319,14 @@ class SpatialDatasetScanner:
             manifest, index = self._view(generation)
             return self._scan_pinned(
                 manifest, index, bbox, columns, refine, parallel, coalesce,
-                device, keep_on_device)
+                device, keep_on_device, filter)
         finally:
             if release:
                 pin.release()
 
     def _scan_pinned(self, manifest, index, bbox, columns, refine, parallel,
-                     coalesce, device, keep_on_device):
-        hit = index.query(bbox)
+                     coalesce, device, keep_on_device, filter=None):
+        hit = index.query(bbox, filter=filter)
         hit_set = set(int(i) for i in hit)
         stats = ReadStats(shards_total=len(index), shards_read=len(hit))
         # pruned shards still count toward the totals (read side stays zero)
@@ -327,6 +337,11 @@ class SpatialDatasetScanner:
                 stats.bytes_total += shard.data_bytes
                 pruned_bytes += shard.data_bytes
         obs.count("pruned.shard_bytes", pruned_bytes)
+        if filter is not None and obs.enabled():
+            # shards inside the bbox that only the zone maps eliminated
+            zoned = np.setdiff1d(index.query(bbox), hit, assume_unique=True)
+            obs.count("pruned.zone_bytes", int(sum(
+                manifest.shards[int(i)].data_bytes for i in zoned)))
 
         if len(hit) == 0:
             outcomes = []
@@ -335,7 +350,7 @@ class SpatialDatasetScanner:
                 futures = [
                     obs.submit(pool, self._read_shard, manifest, int(i), bbox,
                                columns, refine, coalesce, device,
-                               keep_on_device)
+                               keep_on_device, filter)
                     for i in hit
                 ]
                 # gather in submission (manifest) order: deterministic output
@@ -343,7 +358,7 @@ class SpatialDatasetScanner:
         else:
             outcomes = [
                 self._read_shard(manifest, int(i), bbox, columns, refine,
-                                 coalesce, device, keep_on_device)
+                                 coalesce, device, keep_on_device, filter)
                 for i in hit
             ]
 
@@ -389,14 +404,15 @@ class SpatialDatasetScanner:
         parallel: bool = True,
         *,
         keep_on_device: bool = False,
+        filter=None,
     ):
         """Drop-in for :meth:`SpatialParquetReader.read_columnar` (same
         positional order; the extra ``parallel`` knob comes last,
-        ``keep_on_device`` is keyword-only everywhere)."""
+        ``keep_on_device``/``filter`` are keyword-only everywhere)."""
         return self.scan(
             bbox=bbox, columns=columns, refine=refine,
             parallel=parallel, coalesce=coalesce, device=device,
-            keep_on_device=keep_on_device,
+            keep_on_device=keep_on_device, filter=filter,
         )
 
     def read(self, bbox=None, refine: bool = False) -> tuple[list[Geometry], ReadStats]:

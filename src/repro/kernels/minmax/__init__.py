@@ -1,5 +1,5 @@
 from .kernel import SEG_BLOCK
-from .ops import column_page_stats, page_minmax, segment_minmax
+from .ops import column_page_stats, column_page_stats_ex, page_minmax, segment_minmax
 from .ref import (
     bbox_query_keys,
     float_order_key_np,
@@ -16,6 +16,7 @@ from .ref import (
 __all__ = [
     "page_minmax",
     "column_page_stats",
+    "column_page_stats_ex",
     "segment_minmax",
     "segment_minmax_ref",
     "minmax_ref",

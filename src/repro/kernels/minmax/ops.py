@@ -102,6 +102,55 @@ def column_page_stats(values: np.ndarray, page_bounds: np.ndarray, **kw):
     return out_min, out_max
 
 
+def column_page_stats_ex(values: np.ndarray, page_bounds: np.ndarray, **kw):
+    """NaN-aware per-page stats for any numeric dtype: (vmin, vmax, nnan).
+
+    ``vmin``/``vmax`` are the per-page extrema over *non-NaN* values in the
+    column's own dtype (``(+inf, -inf)`` for pages with none — empty or
+    all-NaN), ``nnan`` the per-page NaN count. float32 columns reduce
+    through the batched :func:`page_minmax` launch (the cast in
+    :func:`column_page_stats` is exact for them); wider/integer dtypes use
+    an exact host segmented reduction, since a float32 round-trip could
+    move a bound across a value and make pruning unsound.
+    """
+    values = np.asarray(values)
+    bounds = np.asarray(page_bounds, dtype=np.int64)
+    counts = np.diff(bounds)
+    n_pages = len(counts)
+    if n_pages == 0:
+        return np.zeros(0), np.zeros(0), np.zeros(0, np.int64)
+    if values.dtype.kind == "f" and np.isnan(values).any():
+        csum = np.concatenate([[0], np.cumsum(np.isnan(values), dtype=np.int64)])
+        nnan = csum[bounds[1:]] - csum[bounds[:-1]]
+    else:
+        nnan = np.zeros(n_pages, np.int64)
+    out_min = np.full(n_pages, np.inf)
+    out_max = np.full(n_pages, -np.inf)
+    if values.dtype == np.float32:
+        mn, mx = column_page_stats(values, bounds, **kw)
+        out_min, out_max = np.asarray(mn), np.asarray(mx)
+        # jnp.min propagates NaN; recompute NaN-carrying pages exactly
+        for i in np.flatnonzero((nnan > 0) & (nnan < counts)):
+            v = values[bounds[i]:bounds[i + 1]]
+            out_min[i], out_max[i] = np.fmin.reduce(v), np.fmax.reduce(v)
+        all_nan = nnan == counts
+        out_min[all_nan], out_max[all_nan] = np.inf, -np.inf
+        return out_min, out_max, nnan
+    nonempty = np.flatnonzero(counts > 0)
+    if len(nonempty):
+        # reduceat over non-empty page starts: skipped empty pages contribute
+        # zero elements, so each segment reduces exactly one page; fmin/fmax
+        # skip NaNs (all-NaN segments yield NaN, patched below)
+        starts = bounds[:-1][nonempty]
+        mn = np.fmin.reduceat(values, starts)
+        mx = np.fmax.reduceat(values, starts)
+        out_min[nonempty] = mn
+        out_max[nonempty] = mx
+        all_nan = nnan == counts
+        out_min[all_nan], out_max[all_nan] = np.inf, -np.inf
+    return out_min, out_max, nnan
+
+
 def segment_minmax(key_lo, key_hi, flag, *, use_pallas: bool = True,
                    interpret: bool | None = None):
     """Segmented running min/max over order-key limbs.

@@ -195,8 +195,16 @@ def bbox_query_keys(bbox, dtype: np.dtype) -> np.ndarray | None:
     Bounds are canonicalized per coordinate dtype (float32 bounds round to
     the tightest representable value, zeros pick the matching signed zero)
     so the device key compare is *exactly* the host float compare. Returns
-    None when any bound is NaN — the host test then keeps no record.
+    None when the bbox is empty under the shared canonicalization rule
+    (:func:`repro.core.filters.canonical_bbox`: NaN bound or inverted
+    extent) — the host test then keeps no record, matching the shard- and
+    page-level pruning answer for the same bbox.
     """
+    from repro.core.filters import canonical_bbox
+
+    bbox = canonical_bbox(bbox)
+    if bbox is None:
+        return None
     qx0, qy0, qx1, qy1 = bbox
     vals = (
         _canonical_bound(qx0, dtype, "lo"),

@@ -112,7 +112,13 @@ class Histogram:
         return lo, max(hi, lo)
 
     def quantile(self, q: float) -> float:
-        """Estimated q-quantile (linear interpolation within the bucket)."""
+        """Estimated q-quantile (linear interpolation within the bucket).
+
+        Bucket counts accumulate in an exact Python int (int/float compares
+        are exact in Python): a float accumulator would drift past
+        ``target`` once totals exceed 2**53 and fall through to the max.
+        q=0 and q=1 return the exact observed extremes.
+        """
         if not 0.0 <= q <= 1.0:
             raise ValueError(f"quantile must be in [0, 1], got {q}")
         with self._lock:
@@ -120,14 +126,19 @@ class Histogram:
             if total == 0:
                 return float("nan")
             counts = self._counts.copy()
+        if q == 0.0:
+            return float(self.min)
+        if q == 1.0:
+            return float(self.max)
         target = q * total
-        cum = 0.0
+        cum = 0
         for i, c in enumerate(counts):
+            c = int(c)
             if c == 0:
                 continue
             if cum + c >= target:
                 lo, hi = self._bucket_bounds(i)
-                frac = 0.0 if c == 0 else min(1.0, max(0.0, (target - cum) / c))
+                frac = min(1.0, max(0.0, (target - cum) / c))
                 return float(lo + frac * (hi - lo))
             cum += c
         return float(self.max)

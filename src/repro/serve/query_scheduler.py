@@ -65,6 +65,10 @@ class SpatialQuery:
     qid: int
     bbox: tuple | None
     columns: tuple | None = None
+    # attribute predicate (repro.core.filters.Predicate); evaluated against
+    # the shared row-group decodes so results equal a solo
+    # ``scanner.scan(bbox, refine=True, filter=...)``
+    filter: object | None = None
     geo: GeometryColumns | None = None
     extras: dict = field(default_factory=dict)
     stats: ReadStats | None = None
@@ -307,8 +311,12 @@ class SpatialQueryServer:
         return r
 
     # ------------------------------------------------------------------ API
-    def submit(self, bbox=None, columns=None) -> SpatialQuery:
-        q = SpatialQuery(self._next_qid, bbox, columns,
+    def submit(self, bbox=None, columns=None, filter=None) -> SpatialQuery:
+        if filter is not None:
+            from repro.core.filters import validate_predicate
+
+            validate_predicate(filter, self.scanner.extra_schema)
+        q = SpatialQuery(self._next_qid, bbox, columns, filter,
                          t_submit=time.perf_counter())
         self._next_qid += 1
         self.pending.append(q)
@@ -348,7 +356,7 @@ class SpatialQueryServer:
         """Shard/page pruning + metadata-only ReadStats for one query —
         exactly the accounting of its solo ``scanner.scan``."""
         dindex = self.scanner.index
-        hits = [int(i) for i in dindex.query(q.bbox)]
+        hits = [int(i) for i in dindex.query(q.bbox, filter=q.filter)]
         hit_set = set(hits)
         stats = ReadStats(shards_total=len(dindex), shards_read=len(hits))
         for i, shard in enumerate(self.scanner.manifest.shards):
@@ -358,6 +366,10 @@ class SpatialQueryServer:
         want_extra = (list(self.scanner.extra_schema) if q.columns is None
                       else [c for c in q.columns
                             if c in self.scanner.extra_schema])
+        # the solo scan also fetches the predicate's columns (then trims
+        # them from the output); mirror that in the byte attribution
+        read_extra = want_extra if q.filter is None else want_extra + sorted(
+            c for c in q.filter.columns() if c not in want_extra)
         plan: dict[tuple[int, int], list[tuple[int, int]]] = {}
         for shard_i in hits:
             r = self._reader(shard_i)
@@ -365,7 +377,8 @@ class SpatialQueryServer:
             stats.pages_total += len(idx)
             stats.bytes_total += r._data_bytes
             runs_by_rg: dict[int, list[tuple[int, int]]] = {}
-            for rg_i, p0, p1 in idx.page_runs(q.bbox, hit=idx.query(q.bbox)):
+            for rg_i, p0, p1 in idx.page_runs(
+                    q.bbox, hit=idx.query(q.bbox, filter=q.filter)):
                 runs_by_rg.setdefault(rg_i, []).append((p0, p1))
             for rg_i, runs in runs_by_rg.items():
                 plan[(shard_i, rg_i)] = runs
@@ -382,7 +395,7 @@ class SpatialQueryServer:
                     stats.bytes_read += int(
                         idx.x_nbytes[j0 : j1 + 1].sum()
                         + idx.y_nbytes[j0 : j1 + 1].sum())
-                    for k in want_extra:
+                    for k in read_extra:
                         stats.bytes_read += sum(
                             rg["extra"][k][p]["nbytes"] for p in range(p0, p1))
         return hits, plan, want_extra, stats
@@ -417,11 +430,14 @@ class SpatialQueryServer:
                 wave_keep[:, ch.rec_lo : ch.rec_hi] = res.keep
         return _CacheEntry(data, chunks), wave_keep
 
-    def _rg_keep(self, entry: _CacheEntry, bboxes, qkeys, qvalid,
+    def _rg_keep(self, entry: _CacheEntry, bboxes, filters, qkeys, qvalid,
                  wave_keep) -> np.ndarray:
         """(Q, n_records) survivor matrix for this row group: the fused miss
         launch's matrix when fresh, else compare-only re-tests of the cached
-        statistics. ``bbox=None`` rows keep everything."""
+        statistics. ``bbox=None`` rows keep everything; a query's attribute
+        predicate then ANDs its exact record mask into its row (masks are
+        memoized per predicate key, so same-predicate queries in a wave
+        evaluate it once per row group)."""
         n_rec = entry.data.n_records
         keep = np.zeros((len(bboxes), n_rec), bool)
         dev_done = wave_keep is not None
@@ -443,6 +459,15 @@ class SpatialQueryServer:
         for qi, bbox in enumerate(bboxes):
             if bbox is None:
                 keep[qi, :] = True
+        masks: dict[tuple, np.ndarray] = {}
+        for qi, pred in enumerate(filters):
+            if pred is None:
+                continue
+            attr = masks.get(pred.key)
+            if attr is None:
+                attr = masks[pred.key] = pred.mask(
+                    {k: entry.data.extras[k] for k in pred.columns()})
+            keep[qi, :] &= attr
         return keep
 
     def _run_wave(self, wave: list[SpatialQuery]) -> None:
@@ -460,6 +485,7 @@ class SpatialQueryServer:
                 [q.bbox if q.bbox is not None else (np.nan,) * 4
                  for q in wave], self.coord_dtype)
             bboxes = [q.bbox for q in wave]
+            filters = [q.filter for q in wave]
 
             acc = [_QueryAccum(list(self.scanner.extra_schema)
                                if q.columns is None else
@@ -478,7 +504,8 @@ class SpatialQueryServer:
                     entry, wave_keep = self._fill_entry(
                         shard_i, rg_i, qkeys, qvalid)
                     self.cache.put(key, entry)
-                keep = self._rg_keep(entry, bboxes, qkeys, qvalid, wave_keep)
+                keep = self._rg_keep(entry, bboxes, filters, qkeys, qvalid,
+                                     wave_keep)
                 idx = self._reader(shard_i).index
                 base = int(np.searchsorted(idx.row_group, rg_i, side="left"))
                 vc = entry.data.rec_vcounts
@@ -524,7 +551,7 @@ class SpatialQueryServer:
 
     def _finalize_inner(self, q: SpatialQuery, hits, want_extra,
                         stats: ReadStats, a: "_QueryAccum") -> None:
-        do_refine = q.bbox is not None
+        do_refine = q.bbox is not None or q.filter is not None
         keep_all = (np.concatenate(a.keep_parts) if a.keep_parts
                     else np.zeros(0, bool))
         types_parts, type_rep_parts, rep_parts, defn_parts = a.level_parts

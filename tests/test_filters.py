@@ -1,0 +1,563 @@
+"""Attribute-predicate pushdown: AST semantics, zone-map pruning soundness,
+and cross-level differential equivalence.
+
+The contract under test, at every granularity:
+
+* pruning (shard zone maps, page zone stats) may only *skip work*, never
+  change a result — a filtered read is bit-identical to reading everything
+  and masking row-by-row with the numpy oracle;
+* the fused device path (``bbox ∧ attrs`` inside the decode launch) returns
+  exactly the host path's records;
+* bbox semantics are canonical at every level: a NaN or inverted bbox
+  matches nothing at shard, page, and record granularity alike.
+"""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import SpatialParquetReader, write_file
+from repro.core.filters import (
+    And,
+    ColumnZones,
+    In,
+    IsNull,
+    Predicate,
+    Range,
+    canonical_bbox,
+    validate_predicate,
+)
+from repro.core.reader import _LEVEL_NAMES, footer_data_bytes
+from repro.data.synthetic import porto_taxi_like
+from repro.dataset import SpatialDatasetScanner, SpatialDatasetWriter
+from repro.dataset.errors import DatasetError
+from repro.dataset.index import DatasetIndex
+from repro.dataset.manifest import MANIFEST_NAME, DatasetManifest, ShardInfo
+
+SCHEMA = {"speed": "float64", "heading": "float32", "tid": "int64"}
+SUB_BBOX = (-8.65, 41.12, -8.60, 41.18)
+
+
+def _extras_for(cols, seed=0):
+    rng = np.random.default_rng(seed)
+    n = cols.n_records
+    speed = rng.uniform(0.0, 100.0, n)
+    speed[::17] = np.nan
+    heading = rng.uniform(-180.0, 180.0, n).astype(np.float32)
+    return {"speed": speed, "heading": heading,
+            "tid": np.arange(n, dtype=np.int64)}
+
+
+@pytest.fixture(scope="module")
+def spqf(tmp_path_factory):
+    cols = porto_taxi_like(n_traj=600, seed=5)
+    extra = _extras_for(cols, seed=5)
+    path = str(tmp_path_factory.mktemp("filters") / "f.spqf")
+    foot = write_file(path, columns=cols, extra=extra, extra_schema=SCHEMA,
+                      page_values=1024)
+    return path, foot
+
+
+def _oracle(pred: Predicate, extras: dict) -> np.ndarray:
+    """Plain-numpy reference mask (same arrays the reader returns)."""
+    return pred.mask(extras)
+
+
+# --------------------------------------------------------------------- AST
+def test_canonical_bbox():
+    assert canonical_bbox((0, 1, 2, 3)) == (0.0, 1.0, 2.0, 3.0)
+    assert canonical_bbox((1.5, 2.5, 1.5, 2.5)) == (1.5, 2.5, 1.5, 2.5)
+    for bad in [(np.nan, 0, 1, 1), (0, np.nan, 1, 1), (0, 0, np.nan, 1),
+                (0, 0, 1, np.nan), (2, 0, 1, 1), (0, 2, 1, 1)]:
+        assert canonical_bbox(bad) is None
+
+
+def test_range_mask_semantics():
+    v = np.array([np.nan, -0.0, 0.0, 5.0, -5.0, np.inf, -np.inf,
+                  np.nextafter(0.0, 1.0)])
+    ex = {"c": v}
+    # NaN never matches a range
+    assert not _oracle(Range("c", -np.inf, np.inf), ex)[0]
+    # +-0 compare equal: lo=hi=0.0 keeps both zeros
+    m = Range("c", 0.0, 0.0).mask(ex)
+    assert m.tolist() == [False, True, True, False, False, False, False, False]
+    # denormals sit strictly between 0 and the smallest normal
+    m = Range("c", np.nextafter(0.0, 1.0), 1.0).mask(ex)
+    assert m[7] and not m[1] and not m[2]
+    # both-None = IS NOT NULL
+    assert Range("c").mask(ex).tolist() == [False] + [True] * 7
+
+
+def test_range_rejects_nan_bounds():
+    with pytest.raises(ValueError):
+        Range("c", lo=np.nan)
+    with pytest.raises(ValueError):
+        Range("c", hi=float("nan"))
+
+
+def test_in_rejects_empty_and_nan():
+    with pytest.raises(ValueError):
+        In("c", ())
+    with pytest.raises(ValueError):
+        In("c", (1.0, np.nan))
+
+
+def test_isnull_and_flattening():
+    ex = {"a": np.array([1.0, np.nan]), "b": np.array([1, 2], np.int64)}
+    assert IsNull("a").mask(ex).tolist() == [False, True]
+    assert IsNull("b").mask(ex).tolist() == [False, False]  # ints: no nulls
+    p = And(Range("a", 0.0), And(In("b", (2,)), IsNull("a")))
+    assert all(not isinstance(c, And) for c in p.preds)
+    assert p.columns() == {"a", "b"}
+    q = Range("a", 0.0) & In("b", (2,)) & IsNull("a")
+    assert q.key == p.key
+
+
+def test_validate_predicate():
+    with pytest.raises(TypeError):
+        validate_predicate(object(), SCHEMA)
+    with pytest.raises(ValueError, match="not in extra columns"):
+        validate_predicate(Range("nope", 0.0), SCHEMA)
+    validate_predicate(Range("speed", 0.0) & In("tid", (1,)), SCHEMA)
+
+
+def test_zone_mask_conservative():
+    z = ColumnZones(
+        vmin=np.array([0.0, 10.0, np.nan, np.inf]),
+        vmax=np.array([5.0, 20.0, np.nan, -np.inf]),
+        nnan=np.array([0, 0, -1, 3], np.int64),
+        count=np.array([4, 4, -1, 3], np.int64),
+    )
+    lookup = {"c": z}.get
+    # zone 2 has unknown stats -> always kept; zone 3 is all-NaN -> prunable
+    assert Range("c", 6.0, 9.0).zone_mask(lookup, 4).tolist() == [
+        False, False, True, False]
+    assert In("c", (15.0,)).zone_mask(lookup, 4).tolist() == [
+        False, True, True, False]
+    # IsNull keeps any zone that may hold a NaN
+    assert IsNull("c").zone_mask(lookup, 4).tolist() == [
+        False, False, True, True]
+    # unknown column -> nothing prunable
+    assert Range("d", 0.0).zone_mask(lookup, 4).all()
+
+
+# ------------------------------------------------------------- file level
+def test_writer_persists_extra_stats(spqf):
+    path, foot = spqf
+    r = SpatialParquetReader(path)
+    _, extras, _ = r.read_columnar()
+    for rg in foot["row_groups"]:
+        st = rg["extra_stats"]
+        assert set(st) == set(SCHEMA)
+        for k in SCHEMA:
+            for p in rg["extra"][k]:
+                assert "nnan" in p
+    agg = foot["row_groups"][0]["extra_stats"]["speed"]
+    sp = extras["speed"]
+    assert agg["nnan"] == int(np.isnan(sp[: agg["count"]]).sum())
+    r.close()
+
+
+@pytest.mark.parametrize("device", ["cpu", "jax"])
+def test_selectivity_sweep_matches_oracle(spqf, device):
+    if device == "jax":
+        pytest.importorskip("jax")
+    path, _ = spqf
+    r = SpatialParquetReader(path)
+    _, full, _ = r.read_columnar()
+    sp = full["speed"]
+    qs = np.nanquantile(sp, [0.0, 0.1, 0.5, 0.9, 1.0])
+    for lo in qs:
+        pred = Range("speed", float(lo))
+        ref = _oracle(pred, full)
+        _, got, st = r.read_columnar(filter=pred, device=device)
+        for k in SCHEMA:
+            assert np.array_equal(got[k], full[k][ref],
+                                  equal_nan=True), (device, lo, k)
+        assert st.records_returned == int(ref.sum())
+    r.close()
+
+
+@pytest.mark.parametrize("device", ["cpu", "jax"])
+def test_bbox_and_filter_fused_vs_oracle(spqf, device):
+    if device == "jax":
+        pytest.importorskip("jax")
+    path, _ = spqf
+    r = SpatialParquetReader(path)
+    pred = Range("speed", 20.0, 60.0) & Range("heading", 0.0)
+    geo_b, ex_b, _ = r.read_columnar(bbox=SUB_BBOX, refine=True)
+    ref = _oracle(pred, ex_b)
+    geo_h, ex_h, _ = r.read_columnar(bbox=SUB_BBOX, refine=True, filter=pred)
+    geo_d, ex_d, _ = r.read_columnar(bbox=SUB_BBOX, refine=True, filter=pred,
+                                     device=device)
+    assert np.array_equal(ex_h["tid"], ex_b["tid"][ref])
+    for f in ("types", "type_rep", "rep", "defn", "x", "y"):
+        assert np.array_equal(getattr(geo_h, f),
+                              np.asarray(getattr(geo_d, f))), (device, f)
+    for k in SCHEMA:
+        assert np.array_equal(ex_h[k], ex_d[k], equal_nan=True), (device, k)
+    r.close()
+
+
+def test_special_value_columns_roundtrip(tmp_path):
+    """NaN / ±0 / denormal / huge-int attribute values: zone stats stay
+    conservative, record masks stay exact, f32 columns keep exact bounds."""
+    cols = porto_taxi_like(n_traj=64, seed=9)
+    n = cols.n_records
+    tiny = np.nextafter(0.0, 1.0)
+    vals = np.resize(np.array(
+        [np.nan, -0.0, 0.0, tiny, -tiny, 1e300, -1e300, 1.0]), n)
+    f32 = np.resize(np.array(
+        [np.float32(np.nan), np.float32(-0.0), np.float32(3.3),
+         np.finfo(np.float32).tiny], np.float32), n)
+    big = np.resize(np.array(
+        [2**53 + 1, -(2**53) - 1, 0, 2**62], np.int64), n)
+    path = str(tmp_path / "sv.spqf")
+    write_file(path, columns=cols,
+               extra={"v": vals, "f": f32, "big": big},
+               extra_schema={"v": "float64", "f": "float32", "big": "int64"},
+               page_values=256)
+    r = SpatialParquetReader(path)
+    _, full, _ = r.read_columnar()
+    preds = [
+        Range("v", 0.0, 0.0),           # must keep both zeros
+        Range("v", tiny, 1.0),          # denormal boundary
+        IsNull("v"),
+        Range("f", np.float32(3.3), np.float32(3.3)),
+        In("big", (2**53 + 1,)),        # > 2^53: float stats are rounded
+        Range("big", 2**62, None),
+        Range("v", -1e300, None) & IsNull("f"),
+    ]
+    for pred in preds:
+        ref = _oracle(pred, full)
+        assert ref.any(), pred.key  # the sweep must actually select rows
+        _, got, st = r.read_columnar(filter=pred)
+        for k in full:
+            assert np.array_equal(got[k], full[k][ref],
+                                  equal_nan=True), (pred.key, k)
+    r.close()
+
+
+def test_page_zone_pruning_skips_pages_same_answer(tmp_path):
+    """A file sorted so tid is monotone per page: In() prunes most pages via
+    zone stats, and the pruned read equals the unpruned one bit-for-bit."""
+    cols = porto_taxi_like(n_traj=800, seed=11)
+    extra = _extras_for(cols, seed=11)
+    path = str(tmp_path / "zp.spqf")
+    write_file(path, columns=cols, extra=extra, extra_schema=SCHEMA,
+               page_values=512, sort=None)
+    r = SpatialParquetReader(path)
+    pred = In("tid", (3, 500, 790))
+    _, full, st_full = r.read_columnar()
+    ref = _oracle(pred, full)
+    _, got, st = r.read_columnar(filter=pred)
+    assert np.array_equal(got["tid"], full["tid"][ref])
+    assert st.pages_read < st_full.pages_read  # zone maps actually pruned
+    # pruning changed the work, not the answer: compare against a reader
+    # whose zone statistics are erased (every page looks unknown)
+    r2 = SpatialParquetReader(path)
+    for rg in r2.footer["row_groups"]:
+        for pages in rg["extra"].values():
+            for p in pages:
+                p["vmin"] = p["vmax"] = float("nan")
+                p.pop("nnan", None)
+    r2.index._zones = None
+    _, got2, st2 = r2.read_columnar(filter=pred)
+    assert st2.pages_read == st_full.pages_read
+    for k in SCHEMA:
+        assert np.array_equal(got[k], got2[k], equal_nan=True)
+    r.close()
+    r2.close()
+
+
+def test_filter_columns_trimmed_from_output(spqf):
+    path, _ = spqf
+    r = SpatialParquetReader(path)
+    geo, ex, _ = r.read_columnar(filter=Range("speed", 50.0),
+                                 columns=("geometry", "tid"))
+    assert sorted(ex) == ["tid"]
+    assert geo is not None
+    # geometry-less projection still filters
+    geo2, ex2, _ = r.read_columnar(filter=Range("speed", 50.0),
+                                   columns=("tid",))
+    assert geo2 is None
+    assert np.array_equal(ex2["tid"], ex["tid"])
+    r.close()
+
+
+# ------------------------------------------------- cross-level consistency
+def _dataset(tmp_path, n_traj=1200, sort="hilbert", n_shards=4, seed=3):
+    cols = porto_taxi_like(n_traj=n_traj, seed=seed)
+    extra = _extras_for(cols, seed=seed)
+    root = str(tmp_path / f"lake_{sort}_{n_shards}")
+    with SpatialDatasetWriter(root, extra_schema=SCHEMA, n_shards=n_shards,
+                              sort=sort, page_values=1024) as w:
+        w.write_columns(cols, extra=extra)
+    return root
+
+
+def test_bbox_consistency_across_levels(tmp_path):
+    """Satellite 1: one canonicalization rule at shard, page, and record
+    granularity — the same bbox gives the same answer at every level."""
+    root = _dataset(tmp_path)
+    sc = SpatialDatasetScanner(root)
+    r = sc.open_shard(0)
+    nan_boxes = [(np.nan, 0.0, 1.0, 1.0), (0.0, 0.0, np.nan, 1.0)]
+    inverted = [(-8.0, 41.0, -9.0, 42.0), (-9.0, 42.0, -8.0, 41.0)]
+    for bbox in nan_boxes + inverted:
+        assert len(sc.index.query(bbox)) == 0
+        assert len(r.index.query(bbox)) == 0
+        geo, ex, st = r.read_columnar(bbox=bbox, refine=True)
+        assert st.records_returned == 0
+        geo, ex, st = sc.scan(bbox=bbox, refine=True)
+        assert st.records_returned == 0 and st.shards_read == 0
+    # a live bbox agrees between pruning-only and refined record sets:
+    # refined records are a subset of every coarser level's selection
+    geo_all, ex_all, _ = sc.scan()
+    geo_r, ex_r, _ = sc.scan(bbox=SUB_BBOX, refine=True)
+    geo_p, ex_p, _ = sc.scan(bbox=SUB_BBOX)  # page/shard pruning only
+    assert set(ex_r["tid"]) <= set(ex_p["tid"]) <= set(ex_all["tid"])
+    r.close()
+    sc.close()
+
+
+# ----------------------------------------------------------- dataset level
+def test_dataset_scan_filter_differential(tmp_path):
+    root = _dataset(tmp_path)
+    sc = SpatialDatasetScanner(root)
+    assert all(s.zone_maps is not None and set(s.zone_maps) == set(SCHEMA)
+               for s in sc.manifest.shards)
+    pred = Range("speed", 10.0, 35.0)
+    geo0, full, st0 = sc.scan()
+    ref = _oracle(pred, full)
+    g1, e1, s1 = sc.scan(filter=pred)
+    g2, e2, s2 = sc.scan(filter=pred, parallel=False)
+    for k in SCHEMA:
+        assert np.array_equal(e1[k], full[k][ref], equal_nan=True)
+        assert np.array_equal(e1[k], e2[k], equal_nan=True)
+    # bbox ∧ attrs through the dataset path
+    gb, eb, sb = sc.scan(bbox=SUB_BBOX, refine=True)
+    refb = _oracle(pred, eb)
+    gf, ef, sf = sc.scan(bbox=SUB_BBOX, refine=True, filter=pred)
+    assert np.array_equal(ef["tid"], eb["tid"][refb])
+    sc.close()
+
+
+def test_dataset_zone_maps_prune_shards(tmp_path):
+    # sort=None keeps input order, so each shard holds a contiguous tid
+    # range and In() on a single tid must open exactly one shard
+    root = _dataset(tmp_path, sort=None, n_shards=5)
+    sc = SpatialDatasetScanner(root)
+    pred = In("tid", (7,))
+    hit = sc.index.query(None, filter=pred)
+    assert len(hit) == 1
+    g, e, st = sc.scan(filter=pred)
+    assert st.shards_read == 1 and st.shards_total == 5
+    assert e["tid"].tolist() == [7]
+    # stripping the zone maps may only add work, never change the answer
+    man_path = os.path.join(root, MANIFEST_NAME)
+    with open(man_path) as fh:
+        d = json.load(fh)
+    for s in d["shards"]:
+        s.pop("zone_maps", None)
+    stripped = DatasetManifest.from_dict(d, where="stripped")
+    idx = DatasetIndex(stripped)
+    assert len(idx.query(None, filter=pred)) == 5
+    g2, e2, st2 = sc._scan_pinned(stripped, idx, None, None, False, False,
+                                  True, "cpu", False, pred)
+    assert st2.shards_read == 5
+    for k in SCHEMA:
+        assert np.array_equal(e[k], e2[k], equal_nan=True)
+    sc.close()
+
+
+def test_zone_maps_survive_compaction(tmp_path):
+    from repro.dataset.catalog import Catalog, Compactor
+
+    root = _dataset(tmp_path, n_traj=600, n_shards=4)
+    pred = Range("speed", 0.0, 25.0)
+    with SpatialDatasetScanner(root) as sc:
+        _, before, _ = sc.scan(filter=pred)
+        total = sum(z["count"] for s in sc.manifest.shards
+                    for k, z in s.zone_maps.items() if k == "tid")
+        assert total == sc.manifest.n_records
+    cat = Catalog.open(root)
+    comp = Compactor(cat, target_records=1 << 30)
+    assert comp.run_once() is not None
+    with SpatialDatasetScanner(root) as sc2:
+        assert sc2.manifest.n_shards < 4
+        for s in sc2.manifest.shards:
+            assert s.zone_maps is not None and set(s.zone_maps) == set(SCHEMA)
+        _, after, _ = sc2.scan(filter=pred)
+        for k in SCHEMA:
+            assert np.array_equal(np.sort(before[k]), np.sort(after[k]),
+                                  equal_nan=True)
+
+
+def test_empty_dataset_selectivity_and_scan(tmp_path):
+    """Satellite 3: an empty dataset prunes nothing — selectivity is 1.0
+    ("no pruning"), not 0.0 ("perfect pruning") — and a filtered scan of
+    zero shards returns cleanly."""
+    root = str(tmp_path / "empty")
+    with SpatialDatasetWriter(root, extra_schema=SCHEMA) as w:
+        pass
+    sc = SpatialDatasetScanner(root)
+    assert sc.index.selectivity(None) == 1.0
+    assert sc.index.selectivity((0.0, 0.0, 1.0, 1.0)) == 1.0
+    geo, extras, st = sc.scan(filter=Range("speed", 0.0))
+    assert geo is None and extras == {} and st.shards_read == 0
+    sc.close()
+    # same contract one level down, for an empty single file
+    from repro.core.columnar import GeometryColumns
+
+    empty = GeometryColumns(*(np.zeros(0, np.uint8) for _ in range(4)),
+                            np.zeros(0, np.float64), np.zeros(0, np.float64))
+    path = str(tmp_path / "empty.spqf")
+    write_file(path, columns=empty)
+    r = SpatialParquetReader(path)
+    assert r.index.selectivity(None) == 1.0
+    r.close()
+
+
+def test_manifest_zone_map_validation(tmp_path):
+    base = dict(path="s.spqf", mbr=(0.0, 0.0, 1.0, 1.0), n_records=1,
+                n_values=1, n_pages=1, data_bytes=10, file_bytes=20)
+    ShardInfo(**base, zone_maps={"a": {
+        "min": 0.0, "max": 1.0, "nnan": 0, "count": 1}}).validate(0, "t")
+    for bad in [
+        {"a": {"min": 0.0, "max": 1.0, "nnan": 0}},           # missing key
+        {"a": {"min": "x", "max": 1.0, "nnan": 0, "count": 1}},
+        {"a": {"min": 0.0, "max": 1.0, "nnan": -1, "count": 1}},
+        {"a": {"min": 0.0, "max": None, "nnan": 0, "count": 1}},  # half-null
+        {"a": {"min": 0.0, "max": 1.0, "nnan": True, "count": 1}},
+        "not-a-dict",
+    ]:
+        with pytest.raises(DatasetError):
+            ShardInfo(**base, zone_maps=bad).validate(0, "t")
+    # round-trips through to_dict/from_dict (json-safe)
+    info = ShardInfo(**base, zone_maps={"a": {
+        "min": None, "max": None, "nnan": 3, "count": 3}})
+    d = json.loads(json.dumps(info.to_dict()))
+    assert ShardInfo.from_dict(d).zone_maps == info.zone_maps
+
+
+# ------------------------------------------------------------- serve level
+@pytest.mark.parametrize("device", ["cpu", "jax"])
+def test_serve_per_query_filters(tmp_path, device):
+    if device == "jax":
+        pytest.importorskip("jax")
+    from repro.serve.query_scheduler import SpatialQueryServer
+
+    root = _dataset(tmp_path, n_traj=800, n_shards=3)
+    sc = SpatialDatasetScanner(root)
+    pred = Range("speed", 20.0, 70.0)
+    solo = {
+        "a": sc.scan(bbox=SUB_BBOX, refine=True, filter=pred),
+        "b": sc.scan(filter=In("tid", (1, 2, 750))),
+        "c": sc.scan(bbox=SUB_BBOX, refine=True),
+        "d": sc.scan(filter=pred, columns=("geometry", "tid")),
+    }
+    with SpatialQueryServer(sc, device=device) as srv:
+        for _ in range(2):  # second wave re-tests through the rg cache
+            qs = {
+                "a": srv.submit(bbox=SUB_BBOX, filter=pred),
+                "b": srv.submit(filter=In("tid", (1, 2, 750))),
+                "c": srv.submit(bbox=SUB_BBOX),
+                "d": srv.submit(filter=pred, columns=("geometry", "tid")),
+            }
+            srv.run()
+            for name, q in qs.items():
+                geo_s, ex_s, st_s = solo[name]
+                assert sorted(q.extras) == sorted(ex_s), name
+                for k in q.extras:
+                    assert np.array_equal(q.extras[k], ex_s[k],
+                                          equal_nan=True), (name, k)
+                assert q.stats.bytes_read == st_s.bytes_read, name
+                assert q.stats.records_returned == st_s.records_returned
+        assert srv.cache.hits > 0
+        with pytest.raises(ValueError):
+            srv.submit(filter=Range("nope", 0.0))
+    sc.close()
+
+
+# ------------------------------------------------------- stats accounting
+@pytest.mark.parametrize("device", ["cpu", "jax"])
+@pytest.mark.parametrize("columns", [
+    None, ("geometry",), ("geometry", "speed"), ("tid",),
+    ("geometry", "speed", "heading", "tid")])
+def test_bytes_read_matches_footer_exactly(spqf, device, columns):
+    """Satellite 4: ``bytes_read`` equals the footer-declared sizes of the
+    blobs the projection actually fetched — level streams only when geometry
+    is read, coordinate pages of hit runs, extras pages of requested
+    columns — on the host and device paths alike."""
+    if device == "jax":
+        pytest.importorskip("jax")
+    path, foot = spqf
+    r = SpatialParquetReader(path)
+    want_geom = columns is None or "geometry" in columns
+    want_extra = (list(SCHEMA) if columns is None
+                  else [c for c in columns if c in SCHEMA])
+    expected = 0
+    for rg in foot["row_groups"]:
+        if want_geom:
+            expected += sum(rg[name]["nbytes"] for name in _LEVEL_NAMES)
+            expected += sum(p["nbytes"] for p in rg["x_pages"])
+            expected += sum(p["nbytes"] for p in rg["y_pages"])
+        for k in want_extra:
+            expected += sum(p["nbytes"] for p in rg["extra"][k])
+    _, _, st = r.read_columnar(columns=columns, device=device)
+    assert st.bytes_read == expected, (device, columns)
+    assert st.bytes_total == footer_data_bytes(foot)
+    r.close()
+
+
+def test_bytes_read_with_bbox_and_filter(spqf):
+    """Pruned reads account exactly too: only hit runs' coordinate pages and
+    the extras pages of (requested ∪ filter) columns are counted."""
+    path, foot = spqf
+    r = SpatialParquetReader(path)
+    idx = r.index
+    pred = Range("speed", 30.0)
+    hit = idx.query(SUB_BBOX, filter=pred)
+    runs_by_rg = {}
+    for rg_i, p0, p1 in idx.page_runs(SUB_BBOX, hit=hit):
+        runs_by_rg.setdefault(rg_i, []).append((p0, p1))
+    expected = 0
+    for rg_i, runs in runs_by_rg.items():
+        rg = foot["row_groups"][rg_i]
+        base = int(np.searchsorted(idx.row_group, rg_i, side="left"))
+        expected += sum(rg[name]["nbytes"] for name in _LEVEL_NAMES)
+        for p0, p1 in runs:
+            j0, j1 = base + p0, base + p1 - 1
+            expected += int(idx.x_nbytes[j0:j1 + 1].sum()
+                            + idx.y_nbytes[j0:j1 + 1].sum())
+            for k in ("speed", "tid"):  # requested ∪ filter columns
+                expected += sum(rg["extra"][k][p]["nbytes"]
+                                for p in range(p0, p1))
+    _, ex, st = r.read_columnar(bbox=SUB_BBOX, refine=True, filter=pred,
+                                columns=("geometry", "tid"))
+    assert st.bytes_read == expected
+    assert sorted(ex) == ["tid"]
+    r.close()
+
+
+# ---------------------------------------------------------------- obs wiring
+def test_obs_zone_bytes_and_selectivity(tmp_path):
+    from repro import obs
+
+    root = _dataset(tmp_path, sort=None, n_shards=4, n_traj=400)
+    sc = SpatialDatasetScanner(root)
+    obs.enable()
+    try:
+        sc.scan(filter=In("tid", (5,)))
+        snap = obs.snapshot()
+        assert snap["counters"].get("pruned.zone_bytes", 0) > 0
+        assert "filter.selectivity" in snap["histograms"]
+    finally:
+        # disable() keeps the registry readable; reset it so later tests
+        # observing the module-level snapshot see the pristine empty shape
+        obs.enable()
+        obs.disable()
+    sc.close()

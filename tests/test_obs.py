@@ -279,6 +279,41 @@ def test_histogram_edges():
     assert h2.quantile(1.0) == pytest.approx(10.0)
 
 
+def test_histogram_extreme_quantiles_exact():
+    """q=0 / q=1 return the exact observed extremes (no interpolation), and
+    a single-bucket histogram still answers every quantile sanely."""
+    h = Histogram("x", bounds=[0.0, 100.0])  # one real bucket
+    for v in (3.0, 7.0, 50.0):
+        h.observe(v)
+    assert h.quantile(0.0) == 3.0
+    assert h.quantile(1.0) == 50.0
+    assert 3.0 <= h.quantile(0.5) <= 50.0
+    with pytest.raises(ValueError):
+        h.quantile(-0.1)
+    with pytest.raises(ValueError):
+        h.quantile(1.5)
+
+
+def test_histogram_huge_counts_no_float_drift():
+    """Bucket totals past 2**53: a float accumulator would absorb small
+    counts (cum + c == cum) and push every quantile into the last bucket;
+    the exact integer accumulation must keep low quantiles in the first."""
+    h = Histogram("x", bounds=[0.0, 1.0, 2.0, 3.0])
+    h._counts[1] = 3            # bucket [0, 1)
+    h._counts[2] = 2**60        # bucket [1, 2)
+    h._counts[3] = 5            # bucket [2, 3)
+    h.count = 3 + 2**60 + 5
+    h.min, h.max = 0.5, 2.5
+    h.sum = float(h.count)
+    # q tiny enough that the target falls inside the 3-count bucket
+    q = 1.0 / float(h.count)
+    assert 0.0 <= h.quantile(q) <= 1.0
+    assert 1.0 <= h.quantile(0.5) <= 2.0
+    # near-1 quantile interpolates inside the last bucket, clamped to max
+    assert 2.0 <= h.quantile(1.0 - 1e-18) <= 2.5
+    assert h.quantile(1.0) == 2.5
+
+
 def test_fold_read_stats_counters():
     reg = MetricsRegistry()
     st = ReadStats(pages_total=10, pages_read=4, bytes_total=1000,
